@@ -1,0 +1,75 @@
+"""Shared setup for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.hotset import build_hot_index
+from repro.core.layout import random_layout
+from repro.core.packets import SwitchConfig
+from repro.sim.model import ClusterSim, SystemConfig, Timing, profile_txn
+from repro.workloads import smallbank, tpcc, ycsb
+
+# 12 MAU stages x 2 register arrays == 24 virtual stages (DESIGN.md)
+SWITCH = SwitchConfig(n_stages=24, regs_per_stage=65536, max_instrs=16)
+N_NODES = 8
+SIM_TIME = 0.025
+WARMUP = 0.005
+
+
+def ycsb_profiles(variant="A", dist=0.2, hot_per_node=50, n=3000,
+                  layout="optimal", top_k=None, seed=0):
+    p = ycsb.YCSBParams(n_nodes=N_NODES, hot_per_node=hot_per_node,
+                        variant=variant, dist_frac=dist)
+    rng = np.random.default_rng(seed)
+    sample = ycsb.generate(rng, 4000, p)
+    lf = random_layout if layout == "random" else None
+    kw = dict(layout_fn=lf) if lf else {}
+    hi = build_hot_index(ycsb.traces(sample),
+                         top_k=top_k or hot_per_node * N_NODES,
+                         switch=SWITCH, **kw)
+    txns = ycsb.generate(np.random.default_rng(seed + 1), n, p)
+    return [profile_txn(t, hi, t.home) for t in txns], hi
+
+
+def smallbank_profiles(hot_per_node=10, dist=0.2, n=3000, layout="optimal",
+                       seed=0):
+    p = smallbank.SmallBankParams(n_nodes=N_NODES, hot_per_node=hot_per_node,
+                                  dist_frac=dist)
+    rng = np.random.default_rng(seed)
+    sample = smallbank.generate(rng, 6000, p)
+    lf = random_layout if layout == "random" else None
+    kw = dict(layout_fn=lf) if lf else {}
+    hi = build_hot_index(smallbank.traces(sample),
+                         top_k=hot_per_node * N_NODES * 2, switch=SWITCH,
+                         **kw)
+    txns = smallbank.generate(np.random.default_rng(seed + 1), n, p)
+    return [profile_txn(t, hi, t.home) for t in txns], hi
+
+
+def tpcc_profiles(warehouses=8, dist=0.2, n=3000, layout="optimal", seed=0):
+    p = tpcc.TPCCParams(n_nodes=N_NODES, n_warehouses=warehouses,
+                        dist_frac=dist)
+    rng = np.random.default_rng(seed)
+    sample = tpcc.generate(rng, 5000, p)
+    lf = random_layout if layout == "random" else None
+    kw = dict(layout_fn=lf) if lf else {}
+    nhot = warehouses * (1 + 2 * tpcc.N_DISTRICTS + tpcc.HOT_ITEMS)
+    hi = build_hot_index(tpcc.traces(sample), top_k=nhot, switch=SWITCH, **kw)
+    txns = tpcc.generate(np.random.default_rng(seed + 1), n, p)
+    return [profile_txn(t, hi, t.home) for t in txns], hi
+
+
+def run_sim(profiles, system: SystemConfig, workers=20, sim_time=SIM_TIME,
+            seed=0, timing=None):
+    cs = ClusterSim(profiles, N_NODES, workers, system,
+                    timing=timing or Timing(), seed=seed,
+                    sim_time=sim_time, warmup=WARMUP)
+    return cs.run()
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,66 @@
+"""Run the full (arch x shape x mesh) dry-run sweep, one subprocess per cell
+(isolation: a failing cell records an error JSON and the sweep continues).
+Resumable: cells with an existing artifact are skipped unless --force."""
+from __future__ import annotations
+
+import argparse
+import itertools
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["qwen1.5-0.5b", "internvl2-1b", "gemma-2b", "musicgen-large",
+         "zamba2-2.7b", "rwkv6-7b", "starcoder2-15b", "yi-34b",
+         "qwen3-moe-235b-a22b", "kimi-k2-1t-a32b"]
+SHAPES = ["decode_32k", "long_500k", "train_4k", "prefill_32k"]
+MESHES = ["single", "multi"]
+
+CANON = {"qwen1.5-0.5b": "qwen1p5_0p5b", "internvl2-1b": "internvl2_1b",
+         "gemma-2b": "gemma_2b", "musicgen-large": "musicgen_large",
+         "zamba2-2.7b": "zamba2_2p7b", "rwkv6-7b": "rwkv6_7b",
+         "starcoder2-15b": "starcoder2_15b", "yi-34b": "yi_34b",
+         "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+         "kimi-k2-1t-a32b": "kimi_k2_1t_a32b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    cells = [(a, s, m) for s, a, m in
+             itertools.product(SHAPES, ARCHS, MESHES)]
+    t0 = time.time()
+    done = fail = skip = 0
+    for i, (arch, shape, mesh) in enumerate(cells):
+        path = os.path.join(args.out, f"{CANON[arch]}__{shape}__{mesh}.json")
+        if os.path.exists(path) and not args.force:
+            skip += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", args.out]
+        env = dict(os.environ, PYTHONPATH="src")
+        try:
+            r = subprocess.run(cmd, env=env, timeout=args.timeout,
+                               capture_output=True, text=True)
+            if r.returncode == 0:
+                done += 1
+                print(r.stdout.strip().splitlines()[-1], flush=True)
+            else:
+                fail += 1
+                print(f"FAIL {arch} {shape} {mesh}:", flush=True)
+                print((r.stderr or r.stdout).strip()[-800:], flush=True)
+        except subprocess.TimeoutExpired:
+            fail += 1
+            print(f"TIMEOUT {arch} {shape} {mesh}", flush=True)
+        print(f"-- progress {i + 1}/{len(cells)} ok={done} fail={fail} "
+              f"skip={skip} elapsed={time.time() - t0:.0f}s", flush=True)
+    print(f"SWEEP DONE ok={done} fail={fail} skip={skip} "
+          f"total={time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

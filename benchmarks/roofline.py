@@ -1,0 +1,101 @@
+"""Roofline report: reads the dry-run artifacts and renders the §Roofline
+tables for EXPERIMENTS.md.
+
+  PYTHONPATH=src python benchmarks/roofline.py [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(p))
+        if r.get("tag"):
+            continue            # hillclimb variants live in §Perf
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(recs, mesh):
+    rows = []
+    head = ("| arch | shape | compute | memory | collective | dominant | "
+            "MFLOPs/HLO | mfu_bound | peak GB |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIP (full attention @500k) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        pd = r["per_device"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s', '')} | "
+            f"{rf['useful_ratio']:.2f} | {rf['mfu_bound']:.3f} | "
+            f"{pd['peak_bytes'] / 1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    doms = {}
+    for r in ok:
+        doms.setdefault(r["roofline"]["dominant"], []).append(r)
+    lines = []
+    for d, rs in sorted(doms.items()):
+        lines.append(f"  {d}: {len(rs)} cells")
+    worst = sorted(ok, key=lambda r: r["roofline"]["mfu_bound"])[:5]
+    lines.append("  worst mfu_bound cells: " + ", ".join(
+        f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        f"={r['roofline']['mfu_bound']:.4f}" for r in worst))
+    coll = sorted(ok, key=lambda r: -r["roofline"]["collective_s"])[:5]
+    lines.append("  most collective-bound: " + ", ".join(
+        f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        f"={fmt_s(r['roofline']['collective_s'])}" for r in coll))
+    over = [r for r in ok if r["per_device"]["peak_bytes"] > 16e9]
+    lines.append("  cells over 16GB v5e HBM: " + (", ".join(
+        f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        f"={r['per_device']['peak_bytes'] / 1e9:.0f}GB" for r in over)
+        or "none"))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"## Roofline table ({args.mesh}-pod)\n")
+    print(table(recs, args.mesh))
+    print("\n## Summary\n")
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serve a (reduced) MoE model with batched requests — the P4DB technique
+as a first-class LM feature: token->expert capacity arbitration runs
+through the switch-engine prefix counters.
+
+  PYTHONPATH=src python examples/moe_serving.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+toks = serve("kimi-k2-1t-a32b", smoke=True, batch=4, prompt_len=32, gen=16)
+print("generated token matrix shape:", toks.shape)
+print(toks[:2])

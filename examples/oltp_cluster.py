@@ -1,0 +1,31 @@
+"""End-to-end OLTP serving driver (the paper's kind of system): a simulated
+8-node cluster serving batched transaction requests, P4DB vs baselines,
+reproducing the headline speedups.
+
+  PYTHONPATH=src python examples/oltp_cluster.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common as C
+from repro.sim.model import SystemConfig
+
+print("YCSB-A, 8 nodes x 20 workers, 20% distributed txns")
+profs, hi = C.ycsb_profiles(variant="A")
+print(f"  hot-set layout single-pass rate: "
+      f"{hi.placement.stats['single_pass_rate']:.2f}")
+results = {}
+for kind in ("p4db", "noswitch", "lmswitch"):
+    out = C.run_sim(profs, SystemConfig(kind=kind))
+    results[kind] = out
+    print(f"  {kind:9s}: {out['throughput'] / 1e6:6.2f} M txn/s   "
+          f"mean latency {out.get('lat_all', 0) * 1e6:6.1f} us   "
+          f"aborts {sum(out['aborts'].values())}")
+print(f"  speedup P4DB / No-Switch: "
+      f"{results['p4db']['throughput'] / results['noswitch']['throughput']:.2f}x")
+
+print("\nTPC-C (warm transactions), 8 warehouses")
+profs, _ = C.tpcc_profiles(warehouses=8)
+for kind in ("p4db", "noswitch"):
+    out = C.run_sim(profs, SystemConfig(kind=kind))
+    print(f"  {kind:9s}: {out['throughput'] / 1e6:6.2f} M txn/s")

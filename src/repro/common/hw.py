@@ -1,0 +1,4 @@
+"""Target hardware constants (TPU v5e-class, per assignment)."""
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link

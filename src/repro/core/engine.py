@@ -1,0 +1,225 @@
+"""The in-switch transaction engine, adapted Tofino -> TPU.
+
+Semantics (paper §5.1): packets are never reordered and each MAU stage holds
+one packet per cycle, so pipelined execution of a batch equals the serial
+schedule in admission order.  Multi-pass packets hold the pipeline lock, so
+the serial order still equals admission order (§5.2).
+
+Two functional execution paths produce that serial-equivalent result:
+
+  serial  — lax.scan over the flattened instruction stream.  The oracle.
+            Handles every opcode including CADD (constrained write).
+
+  affine  — the TPU-native adaptation: every {READ, WRITE, ADD} op is an
+            affine map v' = a*v + c; affine maps compose associatively, so a
+            *segmented associative scan* over (register, admission-order)
+            sorted instructions yields every pre/post value in O(log n)
+            depth, fully vectorized.  Serializability-by-pipelining becomes
+            serializability-by-scan.  Batches containing CADD fall back to
+            the serial path (the paper similarly falls back to multi-pass
+            for complex constraints).
+
+A Pallas kernel (kernels/switch_txn) implements the serial-chunk engine
+with VMEM-resident registers — the literal switch-pipeline analogue — and
+is validated against the serial oracle in tests.
+
+Every executed transaction gets a globally-unique ID (GID) reflecting the
+serial order; GIDs drive WAL recovery in repro.db (paper §6.1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
+                                SwitchConfig)
+
+
+def init_registers(cfg: SwitchConfig, values: Optional[np.ndarray] = None):
+    if values is None:
+        return jnp.zeros((cfg.n_stages, cfg.regs_per_stage), jnp.int32)
+    return jnp.asarray(values, jnp.int32)
+
+
+# ------------------------------------------------------------- serial ----
+
+@jax.jit
+def _serial_engine(registers, op, stage, reg, val):
+    """Oracle: sequential execution of the [B, K] instruction stream in
+    (txn, instr) order.  Handles every opcode; ADDP resolves the result of
+    an earlier instruction of the same txn."""
+    S, R = registers.shape
+    B, K = op.shape
+    flat = registers.reshape(-1)
+    g = (stage * R + reg).reshape(-1)
+
+    def step(carry, x):
+        regs, results = carry       # results: [B, K] accumulated
+        o, gi, v, b, k = x
+        cur = regs[gi]
+        prev = results[b, jnp.clip(v, 0, K - 1)]   # ADDP source result
+        addend = jnp.where(o == ADDP, prev, v)
+        post = cur + addend
+        cadd_ok = post >= 0
+        new = jnp.where(o == WRITE, v,
+              jnp.where((o == ADD) | (o == ADDP), post,
+              jnp.where((o == CADD) & cadd_ok, post, cur)))
+        res = jnp.where(o == READ, cur, jnp.where(o == NOP, 0, new))
+        ok = jnp.where(o == CADD, cadd_ok, True)
+        regs = regs.at[gi].set(jnp.where(o == NOP, cur, new))
+        results = results.at[b, k].set(res)
+        return (regs, results), ok
+
+    bb = jnp.repeat(jnp.arange(B), K)
+    kk = jnp.tile(jnp.arange(K), B)
+    (flat, results), ok = jax.lax.scan(
+        step, (flat, jnp.zeros((B, K), jnp.int32)),
+        (op.reshape(-1), g, val.reshape(-1), bb, kk))
+    return flat.reshape(S, R), results, ok.reshape(B, K)
+
+
+@jax.jit
+def _staged_engine(registers, op, stage, reg, val):
+    """The pipeline-structured vectorized engine: stages execute in order
+    (as on the switch); within a stage, per-register segmented affine scans
+    give the serial-equivalent values; ADDP operands resolve from earlier
+    stages' results — legal exactly because the declustered layout puts
+    dependency sources in earlier stages (single-pass property, paper §4).
+
+    Opcodes: NOP/READ/WRITE/ADD/ADDP.  CADD needs the serial path.
+    """
+    S, R = registers.shape
+    B, K = op.shape
+    results = jnp.zeros((B, K), jnp.int32)
+    regs = registers
+
+    for s in range(S):                       # the pipeline: stage by stage
+        active = op * jnp.where(stage == s, 1, 0)  # NOP out other stages
+        prev = jnp.take_along_axis(results, jnp.clip(val, 0, K - 1), axis=1)
+        v_eff = jnp.where(active == ADDP, prev, val)
+        o_eff = jnp.where(active == ADDP, ADD, active)
+        stage_regs, res_s, _ = _affine_engine(
+            regs[s][None, :], o_eff, jnp.zeros_like(stage), reg, v_eff)
+        regs = regs.at[s].set(stage_regs[0])
+        results = jnp.where(active != NOP, res_s, results)
+    return regs, results, jnp.ones((B, K), bool)
+
+
+# ------------------------------------------------------------- affine ----
+
+def _combine(x, y):
+    """Segmented affine composition: elements are (flag, a, c); flag marks a
+    segment start.  Associative."""
+    f1, a1, c1 = x
+    f2, a2, c2 = y
+    a = jnp.where(f2, a2, a2 * a1)
+    c = jnp.where(f2, c2, a2 * c1 + c2)
+    return (f1 | f2, a, c)
+
+
+@jax.jit
+def _affine_engine(registers, op, stage, reg, val):
+    """Vectorized serial-equivalent execution for {NOP, READ, WRITE, ADD}."""
+    S, R = registers.shape
+    B, K = op.shape
+    N = B * K
+    flat = registers.reshape(-1)
+
+    opf = op.reshape(-1)
+    g = (stage * R + reg).reshape(-1)
+    g = jnp.where(opf == NOP, S * R, g)          # sort NOPs to the end
+    v = val.reshape(-1)
+
+    order = jnp.argsort(g, stable=True)          # admission order per register
+    gs = g[order]
+    os_ = opf[order]
+    vs = v[order]
+
+    a = jnp.where(os_ == WRITE, 0, 1).astype(jnp.int32)
+    c = jnp.where((os_ == WRITE) | (os_ == ADD), vs, 0).astype(jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
+
+    # inclusive segmented scan of affine maps
+    fi, ai, ci = jax.lax.associative_scan(_combine, (seg_start, a, c))
+    v0 = flat[jnp.minimum(gs, S * R - 1)]
+    post = ai * v0 + ci                          # value after op i
+    # pre-value = post of previous op in segment (or v0 at the start)
+    prev_post = jnp.concatenate([post[:1] * 0, post[:-1]])
+    pre = jnp.where(seg_start, v0, prev_post)
+    res_sorted = jnp.where(os_ == READ, pre,
+                 jnp.where(os_ == NOP, 0, post))
+
+    # final register value = post at each segment's last element
+    seg_end = jnp.concatenate([gs[1:] != gs[:-1], jnp.ones((1,), bool)])
+    upd_idx = jnp.where(seg_end & (gs < S * R), gs, S * R)
+    flat = jnp.concatenate([flat, jnp.zeros((1,), flat.dtype)])
+    flat = flat.at[upd_idx].set(jnp.where(seg_end, post, 0), mode="drop")
+    new_regs = flat[:-1].reshape(S, R)
+
+    # unsort results
+    res = jnp.zeros((N,), res_sorted.dtype).at[order].set(res_sorted)
+    ok = jnp.ones((N,), bool)
+    return new_regs, res.reshape(B, K), ok.reshape(B, K)
+
+
+# -------------------------------------------------------------- facade ----
+
+class SwitchEngine:
+    """Functional switch: holds register state, executes packet batches in
+    serial-equivalent order, assigns GIDs."""
+
+    def __init__(self, cfg: SwitchConfig, registers=None):
+        self.cfg = cfg
+        self.registers = init_registers(cfg, registers)
+        self.next_gid = 0
+
+    def execute(self, pkts: Dict[str, np.ndarray], mode: str = "auto"
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Execute a batch (serial order = batch order).
+
+        Returns (results [B,K], success [B,K], gids [B])."""
+        op = jnp.asarray(pkts["op"], jnp.int32)
+        stage = jnp.asarray(pkts["stage"], jnp.int32)
+        reg = jnp.asarray(pkts["reg"], jnp.int32)
+        val = jnp.asarray(pkts["operand"], jnp.int32)
+        ops_np = np.asarray(pkts["op"])
+        has_cadd = bool((ops_np == CADD).any())
+        has_addp = bool((ops_np == ADDP).any())
+        if mode == "auto":
+            mode = ("serial" if has_cadd else
+                    "staged" if has_addp else "affine")
+        if mode == "affine" and (has_cadd or has_addp):
+            raise ValueError("affine engine handles {READ,WRITE,ADD} only")
+        if mode == "staged" and has_cadd:
+            raise ValueError("staged engine cannot execute CADD; use serial")
+        if mode == "serial":
+            regs, res, ok = _serial_engine(self.registers, op, stage, reg, val)
+        elif mode == "staged":
+            regs, res, ok = _staged_engine(self.registers, op, stage, reg, val)
+        elif mode == "affine":
+            regs, res, ok = _affine_engine(self.registers, op, stage, reg, val)
+        elif mode == "pallas":
+            from repro.kernels.switch_txn import ops as ktx
+            regs, res, ok = ktx.switch_exec(self.registers, op, stage, reg,
+                                            val)
+        else:
+            raise ValueError(mode)
+        self.registers = regs
+        B = op.shape[0]
+        gids = np.arange(self.next_gid, self.next_gid + B, dtype=np.int64)
+        self.next_gid += B
+        return np.asarray(res), np.asarray(ok), gids
+
+    def read_all(self) -> np.ndarray:
+        return np.asarray(self.registers)
+
+    def snapshot(self):
+        return np.asarray(self.registers).copy(), self.next_gid
+
+    def restore(self, snap):
+        regs, gid = snap
+        self.registers = jnp.asarray(regs)
+        self.next_gid = gid

@@ -1,0 +1,55 @@
+"""Offline hot-set detection (paper §3.1): replay a representative workload
+statement-by-statement, count per-tuple access frequencies, offload the
+top-k to the switch.  The resulting hot index (tuple -> (stage, reg)) is
+replicated to every database node's partition manager."""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.layout import Placement, make_layout
+from repro.core.packets import SwitchConfig
+
+
+def access_frequencies(traces: Sequence[Sequence[Tuple[int, int]]]):
+    freq = collections.Counter()
+    for tr in traces:
+        for t, _ in tr:
+            freq[t] += 1
+    return freq
+
+
+def detect_hotset(traces, top_k: int) -> List[int]:
+    freq = access_frequencies(traces)
+    return [t for t, _ in freq.most_common(top_k)]
+
+
+@dataclass
+class HotIndex:
+    """Replicated per-node index over hot tuples (paper §6.1): tells a node
+    whether a txn is hot/cold/warm and how to build the switch packet."""
+    placement: Placement
+
+    def is_hot(self, tuple_id) -> bool:
+        return tuple_id in self.placement.slot
+
+    def classify(self, trace) -> str:
+        hits = [self.is_hot(t) for t, _ in trace]
+        if all(hits):
+            return "hot"
+        if not any(hits):
+            return "cold"
+        return "warm"
+
+    def slot(self, tuple_id):
+        return self.placement.slot[tuple_id]
+
+
+def build_hot_index(traces, top_k: int, switch: SwitchConfig,
+                    layout_fn=make_layout, seed: int = 0) -> HotIndex:
+    hot = set(detect_hotset(traces, top_k))
+    hot_traces = [[(t, op) for t, op in tr if t in hot] for tr in traces]
+    hot_traces = [tr for tr in hot_traces if tr]
+    placement = layout_fn(hot_traces, switch, seed=seed)
+    return HotIndex(placement)

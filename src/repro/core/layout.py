@@ -1,0 +1,228 @@
+"""Declustered storage model (paper §4).
+
+Given hot-transaction traces, place hot tuples into (stage, register) slots
+so that as many transactions as possible execute in a single pipeline pass:
+
+  1. build a directed weighted conflict graph over hot tuples: an edge
+     (u, v, w) means u and v are co-accessed w times; direction encodes
+     access-order dependencies (read-before-write etc.), bidirectional
+     edges carry no ordering constraint;
+  2. partition nodes into <= n_stages capacity-bounded groups maximizing
+     the cut (equivalently minimizing co-located co-accesses).  The paper
+     uses MQLib; this container has no MQLib, so we use greedy balanced
+     seeding + local-search moves (documented in DESIGN.md) — the same
+     class of max-cut heuristic;
+  3. orient the partition DAG: per cut, drop the direction with the lower
+     total weight (those accesses go multi-pass), topologically order the
+     rest, assign partitions to stages in that order.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.packets import NOP, READ, SwitchConfig
+
+
+@dataclass
+class ConflictGraph:
+    nodes: List[int]                              # tuple ids
+    index: Dict[int, int]
+    w: np.ndarray                                 # [n, n] co-access weight
+    d: np.ndarray                                 # [n, n] directed weight u->v
+
+    @staticmethod
+    def from_traces(traces: Sequence[Sequence[Tuple[int, int]]]):
+        """traces: per txn, ordered list of (tuple_id, op).  A dependency
+        u -> v is recorded when u is accessed before v in the same txn and
+        v's op is order-sensitive w.r.t. u (we conservatively treat program
+        order of a read followed by any later op as a dependency)."""
+        ids = sorted({t for tr in traces for t, _ in tr})
+        index = {t: i for i, t in enumerate(ids)}
+        n = len(ids)
+        w = np.zeros((n, n), np.float64)
+        d = np.zeros((n, n), np.float64)
+        for tr in traces:
+            seen = []
+            for t, op in tr:
+                i = index[t]
+                for j, jop in seen:
+                    if i == j:
+                        continue
+                    w[i, j] += 1.0
+                    w[j, i] += 1.0
+                    # order dependency: earlier read feeding a later op
+                    if jop == READ:
+                        d[j, i] += 1.0
+                    else:
+                        d[j, i] += 0.25      # weak program-order preference
+                seen.append((i, op))
+        return ConflictGraph(ids, index, w, d)
+
+
+@dataclass
+class Placement:
+    slot: Dict[int, Tuple[int, int]]              # tuple -> (stage, reg)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def lookup(self, tuple_id):
+        return self.slot.get(tuple_id)
+
+
+def _intra_weight(w, parts):
+    total = 0.0
+    for p in parts:
+        if len(p) > 1:
+            idx = np.asarray(p)
+            total += w[np.ix_(idx, idx)].sum() / 2.0
+    return total
+
+
+def partition_maxcut(w: np.ndarray, k: int, capacity: int, iters: int = 4,
+                     seed: int = 0):
+    """Capacity-bounded multiway max-cut via greedy seeding + local search.
+
+    Returns list of k lists of node indices (some possibly empty)."""
+    n = w.shape[0]
+    rng = np.random.default_rng(seed)
+    # greedy: place nodes in descending degree into the partition with the
+    # least connection weight to it (max-cut greedy) that has room
+    order = np.argsort(-w.sum(1))
+    parts = [[] for _ in range(k)]
+    load = np.zeros(k, int)
+    conn = np.zeros((k, n))                      # weight(part, node)
+    assign = np.full(n, -1, int)
+    for u in order:
+        cand = [p for p in range(k) if load[p] < capacity]
+        p = min(cand, key=lambda q: (conn[q, u], load[q]))
+        parts[p].append(int(u))
+        assign[u] = p
+        load[p] += 1
+        conn[p] += w[u]
+    # local search: move a node to a lighter-connected partition if it
+    # reduces intra-partition weight
+    for _ in range(iters):
+        improved = False
+        for u in rng.permutation(n):
+            p = assign[u]
+            best, best_gain = p, 0.0
+            for q in range(k):
+                if q == p or load[q] >= capacity:
+                    continue
+                gain = conn[p, u] - conn[q, u]
+                if gain > best_gain + 1e-12:
+                    best, best_gain = q, gain
+            if best != p:
+                parts[p].remove(int(u))
+                parts[best].append(int(u))
+                assign[u] = best
+                load[p] -= 1
+                load[best] += 1
+                conn[p] -= w[u]
+                conn[best] += w[u]
+                improved = True
+        if not improved:
+            break
+    return parts, assign
+
+
+def order_partitions(d: np.ndarray, parts):
+    """Topologically order partitions by directed cut weight; backward
+    edges (minority direction per cut) are dropped and counted (those
+    accesses become multi-pass).  Greedy minimum-feedback-arc ordering."""
+    k = len(parts)
+    pw = np.zeros((k, k))
+    for a in range(k):
+        for b in range(k):
+            if a == b or not parts[a] or not parts[b]:
+                continue
+            pw[a, b] = d[np.ix_(parts[a], parts[b])].sum()
+    remaining = [p for p in range(k)]
+    order = []
+    dropped = 0.0
+    while remaining:
+        # pick the partition with the least incoming weight from remaining
+        best = min(remaining,
+                   key=lambda p: sum(pw[q, p] for q in remaining if q != p))
+        dropped += sum(pw[q, best] for q in remaining if q != best)
+        order.append(best)
+        remaining.remove(best)
+    kept = pw.sum() - dropped
+    return order, kept, dropped
+
+
+def make_layout(traces, switch: SwitchConfig, seed: int = 0) -> Placement:
+    g = ConflictGraph.from_traces(traces)
+    n = len(g.nodes)
+    if n == 0:
+        return Placement({}, {"single_pass_rate": 1.0})
+    parts, _ = partition_maxcut(g.w, switch.n_stages, switch.regs_per_stage,
+                                seed=seed)
+    order, kept, dropped = order_partitions(g.d, parts)
+    slot = {}
+    for stage, p in enumerate(order):
+        for r, u in enumerate(sorted(parts[p])):
+            slot[g.nodes[u]] = (stage, r)
+    pl = Placement(slot)
+    pl.stats = dict(
+        intra_weight=_intra_weight(g.w, parts),
+        kept_direction_weight=float(kept),
+        dropped_direction_weight=float(dropped),
+        single_pass_rate=single_pass_rate(traces, pl),
+    )
+    return pl
+
+
+def random_layout(traces, switch: SwitchConfig, seed: int = 0) -> Placement:
+    """Worst-case baseline of §7.6.3: tuples assigned to stages randomly."""
+    ids = sorted({t for tr in traces for t, _ in tr})
+    rng = np.random.default_rng(seed)
+    slot = {}
+    used = collections.Counter()
+    for t in ids:
+        s = int(rng.integers(switch.n_stages))
+        slot[t] = (s, used[s])
+        used[s] += 1
+    pl = Placement(slot)
+    pl.stats = dict(single_pass_rate=single_pass_rate(traces, pl))
+    return pl
+
+
+def txn_stage_sequence(trace, placement: Placement):
+    return [placement.slot[t][0] for t, _ in trace if t in placement.slot]
+
+
+def trace_reorderable(trace) -> bool:
+    """Ops with no intra-txn dependencies (no repeated tuple, no ADDP
+    read-dependent write) may be issued in any order — the node sorts the
+    packet's instructions by stage before sending (paper §6.1: the
+    partition manager knows each tuple's stage)."""
+    from repro.core.packets import ADDP
+    ids = [t for t, _ in trace]
+    if len(set(ids)) != len(ids):
+        return False
+    return all(op != ADDP for _, op in trace)
+
+
+def txn_is_single_pass(trace, placement: Placement) -> bool:
+    """Single pass iff the access sequence can be issued in strictly
+    increasing stage order: reorderable txns only need pairwise-distinct
+    stages; dependency-ordered txns need program order to increase
+    (paper §4.1)."""
+    ids = [t for t, _ in trace]
+    if len(set(ids)) != len(ids):
+        return False
+    seq = txn_stage_sequence(trace, placement)
+    if trace_reorderable(trace):
+        return len(set(seq)) == len(seq)
+    return all(b > a for a, b in zip(seq, seq[1:]))
+
+
+def single_pass_rate(traces, placement: Placement) -> float:
+    if not traces:
+        return 1.0
+    ok = sum(txn_is_single_pass(tr, placement) for tr in traces)
+    return ok / len(traces)

@@ -1,0 +1,115 @@
+"""Switch-transaction packet format (paper §5.4, Figure 6).
+
+One network packet == one transaction.  A packet carries a header
+(is_multipass, locks, nb_recircs) and up to ``max_instrs`` instructions,
+each targeting one (stage, register) slot with one operation:
+
+  NOP    —
+  READ   result = v
+  WRITE  v' = x          result = x
+  ADD    v' = v + x      result = v + x        (fixed-point arithmetic)
+  CADD   v' = v + x  if  v + x >= 0  else  v   (P4 constrained-write;
+         result = v', success flag = applied)  e.g. SmallBank balance >= 0
+
+Tofino constraints modeled (paper §2.3/§4.1):
+  * register arrays are partitioned over MAU stages; one access per stage
+    register per pipeline pass,
+  * access order within a pass must follow stage order (strictly
+    increasing stage sequence),
+  * violating either forces a multi-pass execution (recirculation).
+
+We model one register array per stage (S stages x R slots); hardware with
+k arrays per stage is equivalent to S*k virtual stages (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+NOP, READ, WRITE, ADD, CADD, ADDP = 0, 1, 2, 3, 4, 5
+OP_NAMES = {NOP: "nop", READ: "read", WRITE: "write", ADD: "add",
+            CADD: "cadd", ADDP: "addp"}
+# ADDP: v' = v + result(instr[operand]) — the read value of an earlier
+# instruction in the SAME packet is carried in packet metadata and used as
+# the operand of a later-stage op (paper Fig 4: "B = B + A").  Only legal
+# when the source instruction targets an earlier stage — which is exactly
+# what the declustered layout guarantees for single-pass transactions.
+
+
+@dataclass(frozen=True)
+class SwitchConfig:
+    n_stages: int = 20
+    regs_per_stage: int = 65536      # ~820K 8B tuples/pipe (paper §2.3) / 16
+    max_instrs: int = 8
+
+    @property
+    def total_slots(self):
+        return self.n_stages * self.regs_per_stage
+
+
+def empty_packets(n: int, cfg: SwitchConfig) -> Dict[str, np.ndarray]:
+    K = cfg.max_instrs
+    return dict(
+        op=np.zeros((n, K), np.int32),
+        stage=np.zeros((n, K), np.int32),
+        reg=np.zeros((n, K), np.int32),
+        operand=np.zeros((n, K), np.int32),
+        is_multipass=np.zeros((n,), bool),
+        locks=np.zeros((n, 2), np.int32),
+        nb_recircs=np.zeros((n,), np.int32),
+    )
+
+
+def make_packet(instrs, cfg: SwitchConfig) -> Dict[str, np.ndarray]:
+    """instrs: list of (op, stage, reg, operand)."""
+    p = empty_packets(1, cfg)
+    assert len(instrs) <= cfg.max_instrs, "too many instructions"
+    for i, (op, st, rg, val) in enumerate(instrs):
+        p["op"][0, i] = op
+        p["stage"][0, i] = st
+        p["reg"][0, i] = rg
+        p["operand"][0, i] = val
+    p["is_multipass"][0] = n_passes(p, 0, cfg) > 1
+    return p
+
+
+def concat_packets(pkts) -> Dict[str, np.ndarray]:
+    return {k: np.concatenate([p[k] for p in pkts], axis=0)
+            for k in pkts[0]}
+
+
+def split_passes(p: Dict[str, np.ndarray], i: int):
+    """Greedy pass decomposition of packet i: a new pass starts whenever the
+    stage sequence does not strictly increase (paper §5.2)."""
+    passes = []
+    cur = []
+    last = -1
+    K = p["op"].shape[1]
+    for k in range(K):
+        if p["op"][i, k] == NOP:
+            continue
+        st = int(p["stage"][i, k])
+        if st <= last:
+            passes.append(cur)
+            cur = []
+        cur.append(k)
+        last = st
+    if cur:
+        passes.append(cur)
+    return passes or [[]]
+
+
+def n_passes(p: Dict[str, np.ndarray], i: int, cfg: SwitchConfig = None):
+    return len(split_passes(p, i))
+
+
+def is_single_pass(p: Dict[str, np.ndarray], i: int) -> bool:
+    return n_passes(p, i) == 1
+
+
+def mark_multipass(p: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    for i in range(p["op"].shape[0]):
+        p["is_multipass"][i] = not is_single_pass(p, i)
+    return p

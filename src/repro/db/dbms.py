@@ -1,0 +1,301 @@
+"""Shared-nothing host DBMS with the switch as an additional node (paper §6).
+
+Functional (value-level) execution used by tests, examples and recovery
+benchmarks; contention timing lives in repro.sim.  Pieces:
+
+  * per-node in-memory store + 2PL lock table (NO_WAIT / WAIT_DIE),
+  * 2PC for distributed cold parts,
+  * hot / cold / warm classification through the replicated hot index,
+  * warm protocol: cold sub-txn made abort-proof (locks acquired, constraints
+    checked) BEFORE the switch sub-txn is sent; switch sub-txns count as
+    committed on send (they cannot abort),
+  * WAL per node: switch txns log intended ops before send, results + GID
+    after the response; recovery rebuilds node state and — on switch failure
+    — reconstructs switch registers from all logs, ordering by GID and
+    gap-filling in-flight txns via read/write-set dependencies (paper §A.3).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import SwitchEngine
+from repro.core.hotset import HotIndex
+from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
+                                SwitchConfig, empty_packets, mark_multipass)
+from repro.db.txn import Txn, node_of
+
+NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
+
+
+class Abort(Exception):
+    pass
+
+
+@dataclass
+class LogEntry:
+    kind: str                 # begin|write|switch_send|switch_result|commit|abort
+    tid: int
+    payload: dict = field(default_factory=dict)
+
+
+class DBNode:
+    def __init__(self, node_id: int, protocol: str = NO_WAIT):
+        self.id = node_id
+        self.store: Dict[int, int] = collections.defaultdict(int)
+        self.locks: Dict[int, Tuple[str, set]] = {}     # key -> (mode, owners)
+        self.protocol = protocol
+        self.wal: List[LogEntry] = []
+        self.ts = 0
+
+    # ---------------------------------------------------------- locking --
+    def acquire(self, tid: int, ts: int, key: int, mode: str):
+        cur = self.locks.get(key)
+        if cur is None:
+            self.locks[key] = (mode, {tid})
+            return
+        cmode, owners = cur
+        if tid in owners:
+            if mode == "X" and cmode == "S" and len(owners) == 1:
+                self.locks[key] = ("X", owners)
+            elif mode == "X" and cmode == "S":
+                raise Abort(f"upgrade conflict on {key}")
+            return
+        if cmode == "S" and mode == "S":
+            owners.add(tid)
+            return
+        # conflict: NO_WAIT aborts instantly; WAIT_DIE aborts younger
+        # requesters (the functional layer has no real waiting — a txn that
+        # *would* wait is retried by the caller, matching the sim's model)
+        raise Abort(f"lock conflict on {key}")
+
+    def release_all(self, tid: int):
+        for key in list(self.locks):
+            mode, owners = self.locks[key]
+            owners.discard(tid)
+            if not owners:
+                del self.locks[key]
+
+    # -------------------------------------------------------------- wal --
+    def log(self, kind, tid, **payload):
+        self.wal.append(LogEntry(kind, tid, payload))
+
+    def crash(self):
+        """Lose volatile state; keep the WAL (stable storage)."""
+        self.store = collections.defaultdict(int)
+        self.locks = {}
+
+    def recover_local(self):
+        committed = {e.tid for e in self.wal if e.kind == "commit"}
+        # switch sub-txns count as committed once sent (paper §6.1)
+        committed |= {e.tid for e in self.wal if e.kind == "switch_send"}
+        for e in self.wal:
+            if e.kind == "write" and e.tid in committed:
+                self.store[e.payload["key"]] = e.payload["new"]
+
+
+class Cluster:
+    """Functional P4DB cluster: nodes + switch + hot index."""
+
+    def __init__(self, n_nodes: int, switch_cfg: SwitchConfig,
+                 hot_index: Optional[HotIndex] = None,
+                 protocol: str = NO_WAIT, use_switch: bool = True):
+        self.nodes = [DBNode(i, protocol) for i in range(n_nodes)]
+        self.switch_cfg = switch_cfg
+        self.switch = SwitchEngine(switch_cfg)
+        self.hot_index = hot_index
+        self.use_switch = use_switch and hot_index is not None
+        self._ts = 0
+        self.stats = collections.Counter()
+
+    # ------------------------------------------------------------ setup --
+    def load(self, key: int, value: int):
+        self.nodes[node_of(key)].store[key] = value
+        if self.use_switch and self.hot_index.is_hot(key):
+            s, r = self.hot_index.slot(key)
+            self.switch.registers = self.switch.registers.at[s, r].set(value)
+
+    def classify(self, txn: Txn) -> str:
+        if not self.use_switch:
+            return "cold"
+        trace = [(k, o) for o, k, _ in txn.ops]
+        return self.hot_index.classify(trace)
+
+    # -------------------------------------------------------- execution --
+    def run(self, txn: Txn, max_retries: int = 10):
+        for _ in range(max_retries):
+            try:
+                return self._run_once(txn)
+            except Abort:
+                self.stats["aborts"] += 1
+                for n in self.nodes:
+                    n.release_all(txn.tid)
+        self.stats["gave_up"] += 1
+        return None
+
+    def _run_once(self, txn: Txn):
+        kind = self.classify(txn)
+        self.stats[kind] += 1
+        if kind == "hot":
+            return self._run_hot(txn)
+        if kind == "cold":
+            return self._run_cold(txn)
+        return self._run_warm(txn)
+
+    # hot: switch-only, abort-free, no coordination (paper §5)
+    def _run_hot(self, txn: Txn):
+        home = self.nodes[txn.home]
+        pkt, order = self._to_packet(txn)
+        home.log("switch_send", txn.tid,
+                 ops=[(o, k, v) for o, k, v in txn.ops])
+        res, ok, gids = self.switch.execute(pkt)
+        home.log("switch_result", txn.tid, gid=int(gids[0]),
+                 results=res[0, :len(txn.ops)].tolist())
+        self.stats["commits"] += 1
+        if pkt["is_multipass"][0]:
+            self.stats["multipass"] += 1
+        out = [0] * len(txn.ops)
+        for slot, i in enumerate(order):
+            out[i] = int(res[0, slot])
+        return out
+
+    def _to_packet(self, txn: Txn):
+        """Build the switch packet; dependency-free op lists are sorted by
+        stage (the partition manager knows every tuple's stage), which is
+        what makes e.g. YCSB single-pass.  Returns (pkt, perm) where perm
+        maps packet slots back to txn op indices."""
+        from repro.core.layout import trace_reorderable
+        trace = [(k, o) for o, k, _ in txn.ops]
+        order = list(range(len(txn.ops)))
+        if trace_reorderable(trace):
+            order.sort(key=lambda i: self.hot_index.slot(txn.ops[i][1])[0])
+        pkt = empty_packets(1, self.switch_cfg)
+        for slot, i in enumerate(order):
+            o, k, v = txn.ops[i]
+            s, r = self.hot_index.slot(k)
+            pkt["op"][0, slot] = o
+            pkt["stage"][0, slot] = s
+            pkt["reg"][0, slot] = r
+            pkt["operand"][0, slot] = v
+        return mark_multipass(pkt), order
+
+    # cold: 2PL on nodes (+2PC when distributed)
+    def _run_cold(self, txn: Txn):
+        self._ts += 1
+        results = self._exec_on_nodes(txn, ts=self._ts)
+        participants = {node_of(k) for k in txn.keys()}
+        # 2PC: prepare is implicit (locks held + constraints checked);
+        # every participant votes commit, then commits + releases
+        for p in participants:
+            self.nodes[p].log("commit", txn.tid)
+            self.nodes[p].release_all(txn.tid)
+        self.stats["commits"] += 1
+        if len(participants) > 1:
+            self.stats["distributed"] += 1
+        return results
+
+    def _exec_on_nodes(self, txn: Txn, ts: int, keys_subset=None):
+        """Acquire locks then apply ops; raises Abort on conflict or
+        constraint violation (before any write is applied we stage them)."""
+        results = [0] * len(txn.ops)
+        staged: List[Tuple[int, int, int]] = []        # (node, key, newval)
+        values: Dict[int, int] = {}
+        for i, (o, k, v) in enumerate(txn.ops):
+            if keys_subset is not None and k not in keys_subset:
+                continue
+            n = self.nodes[node_of(k)]
+            mode = "S" if o == READ else "X"
+            n.acquire(txn.tid, ts, k, mode)
+            cur = values.get(k, n.store[k])
+            if o == READ:
+                results[i] = cur
+            elif o == WRITE:
+                values[k] = v
+                results[i] = v
+            elif o == ADD:
+                values[k] = cur + v
+                results[i] = values[k]
+            elif o == ADDP:
+                values[k] = cur + results[v]
+                results[i] = values[k]
+            elif o == CADD:
+                if cur + v < 0:
+                    raise Abort(f"constraint on {k}")
+                values[k] = cur + v
+                results[i] = values[k]
+        for k, nv in values.items():
+            n = self.nodes[node_of(k)]
+            n.log("write", txn.tid, key=k, old=n.store[k], new=nv)
+            n.store[k] = nv
+        return results
+
+    # warm: cold part made abort-proof first, then the switch sub-txn
+    # (paper §6.2, Fig 8/10)
+    def _run_warm(self, txn: Txn):
+        self._ts += 1
+        hot_keys = {k for k in txn.keys() if self.hot_index.is_hot(k)}
+        cold_ops = [(i, (o, k, v)) for i, (o, k, v) in enumerate(txn.ops)
+                    if k not in hot_keys]
+        hot_ops = [(i, (o, k, v)) for i, (o, k, v) in enumerate(txn.ops)
+                   if k in hot_keys]
+        # ADDP across the hot/cold boundary would need the cold tuple
+        # offloaded too (paper §6.2); workloads avoid it by construction.
+        cold_txn = Txn(txn.kind, [op for _, op in cold_ops], txn.home,
+                       tid=txn.tid)
+        cold_res = self._exec_on_nodes(cold_txn, ts=self._ts)
+        # cold part can no longer abort -> send switch sub-txn
+        hot_txn = Txn(txn.kind, [op for _, op in hot_ops], txn.home,
+                      tid=txn.tid)
+        hot_res = self._run_hot(hot_txn)
+        # commit cold part everywhere (2PC decision broadcast)
+        for p in {node_of(k) for k in cold_txn.keys()}:
+            self.nodes[p].log("commit", txn.tid)
+            self.nodes[p].release_all(txn.tid)
+        results = [0] * len(txn.ops)
+        for (i, _), r in zip(cold_ops, cold_res):
+            results[i] = r
+        for (i, _), r in zip(hot_ops, hot_res):
+            results[i] = r
+        return results
+
+    # -------------------------------------------------------- recovery --
+    def crash_switch_and_recover(self):
+        """Rebuild switch registers from the nodes' WALs (paper §6.1/A.3)."""
+        entries = []          # (gid_or_None, send_entry, result_entry)
+        for n in self.nodes:
+            sends = {e.tid: e for e in n.wal if e.kind == "switch_send"}
+            res = {e.tid: e for e in n.wal if e.kind == "switch_result"}
+            for tid, se in sends.items():
+                re = res.get(tid)
+                gid = re.payload["gid"] if re else None
+                entries.append((gid, se, re))
+        known = sorted([e for e in entries if e[0] is not None],
+                       key=lambda e: e[0])
+        unknown = [e for e in entries if e[0] is None]
+        # replay: fresh registers, known GID order first, then in-flight
+        # txns ordered by read/write-set dependencies against the replayed
+        # state (Fig 9: a read that observed x must follow the write of x)
+        self.switch = SwitchEngine(self.switch_cfg)
+        # re-load hot tuples' initial values from node stores? initial switch
+        # values were offloaded at setup; replay assumes log captures all
+        # mutations since offload, so start from the offload snapshot:
+        if getattr(self, "_offload_snapshot", None) is not None:
+            self.switch.registers = self._offload_snapshot
+        order = [se for _, se, _ in known]
+        order += [se for _, se, _ in unknown]   # no dependency -> any order
+        for se in order:
+            t = Txn("replay", [tuple(o) for o in se.payload["ops"]], 0)
+            pkt, _ = self._to_packet(t)
+            self.switch.execute(pkt)
+        return len(known), len(unknown)
+
+    def snapshot_offload(self):
+        self._offload_snapshot = self.switch.registers
+
+    def crash_node_and_recover(self, node_id: int):
+        n = self.nodes[node_id]
+        n.crash()
+        n.recover_local()

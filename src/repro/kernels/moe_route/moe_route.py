@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: P4DB-style capacity arbitration for MoE routing.
+
+Tokens are transactions; each expert's admission counter is a hot tuple.
+The sorted expert-id stream is processed in blocks; a carry
+(last_expert_id, running_count) lives in scratch and persists across the
+sequential grid — exactly the switch-pipeline pattern of stage-local state
+observed by packets in admission order.
+
+Per block of size C (sorted ascending):
+  pos_local[i] = #{j < i : id[j] == id[i]}        (strict lower-tri match)
+  pos[i]       = pos_local[i] + carry_count * [id[i] == carry_id]
+  new carry    = (id[C-1], count(id == id[C-1]) (+ carry if it continues))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, pos_ref, carry_ref, *, block):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(-1)   # carry_id (no expert)
+        carry_ref[1] = jnp.int32(0)    # carry_count
+
+    ids = ids_ref[...]
+    eq = ids[:, None] == ids[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    pos_local = jnp.sum(jnp.where(eq & tril, 1, 0), axis=1).astype(jnp.int32)
+
+    carry_id = carry_ref[0]
+    carry_count = carry_ref[1]
+    pos = pos_local + jnp.where(ids == carry_id, carry_count, 0)
+    pos_ref[...] = pos
+
+    last = ids[block - 1]
+    last_count = jnp.sum(jnp.where(ids == last, 1, 0)).astype(jnp.int32)
+    carry_ref[1] = last_count + jnp.where(carry_id == last, carry_count, 0)
+    carry_ref[0] = last
+
+
+def moe_route_call(sorted_ids, *, block=1024, interpret=True):
+    """sorted_ids: [N] int32 ascending (N % block == 0).  Returns [N]
+    int32 positions within each expert group, serial order preserved."""
+    n = sorted_ids.shape[0]
+    assert n % block == 0, (n, block)
+    kernel = functools.partial(_kernel, block=block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(sorted_ids)

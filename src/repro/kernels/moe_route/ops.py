@@ -1,0 +1,29 @@
+"""jit'd wrapper for the moe_route kernel: pads to a block multiple with a
+sentinel larger than any expert id (keeps the stream sorted)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_route.moe_route import moe_route_call
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def route_positions(sorted_ids, block=1024, interpret=None):
+    """sorted_ids: [N] int32 ascending.  Returns [N] int32 positions."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = sorted_ids.shape[0]
+    blk = min(block, max(n, 8))
+    pad = (-n) % blk
+    sentinel = jnp.iinfo(jnp.int32).max
+    ids = jnp.concatenate([sorted_ids.astype(jnp.int32),
+                           jnp.full((pad,), sentinel, jnp.int32)])
+    pos = moe_route_call(ids, block=blk, interpret=interpret)
+    return pos[:n]

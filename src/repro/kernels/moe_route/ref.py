@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for moe_route: serial-order position of each entry in a
+sorted expert-id stream (== the P4DB switch counter each token would read
+in pipeline order)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def positions_ref(sorted_ids):
+    """sorted_ids: [N] int32 ascending.  Returns [N] int32 positions."""
+    n = sorted_ids.shape[0]
+    first = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    return jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)

@@ -1,0 +1,39 @@
+"""jit'd wrapper around the switch_txn Pallas kernel: pads the instruction
+stream, flattens (stage, reg) -> global slot, restores [B, K] shapes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.switch_txn.switch_txn import switch_txn_call
+
+NOP = 0
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def switch_exec(registers, op, stage, reg, val, chunk=1024, interpret=None):
+    """registers: [S, R] int32; op/stage/reg/val: [B, K].
+
+    Returns (new_registers [S,R], results [B,K], ok [B,K] bool)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    S, R = registers.shape
+    B, K = op.shape
+    n = B * K
+    pad = (-n) % chunk
+    opf = jnp.concatenate([op.reshape(-1),
+                           jnp.full((pad,), NOP, jnp.int32)])
+    g = (stage * R + reg).reshape(-1)
+    gf = jnp.concatenate([g, jnp.zeros((pad,), jnp.int32)])
+    vf = jnp.concatenate([val.reshape(-1), jnp.zeros((pad,), jnp.int32)])
+    regs, res, ok = switch_txn_call(registers.reshape(-1), opf, gf, vf,
+                                    chunk=min(chunk, n + pad),
+                                    interpret=interpret)
+    return (regs.reshape(S, R), res[:n].reshape(B, K),
+            ok[:n].reshape(B, K).astype(bool))

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: the switch pipeline as a VMEM-resident register file.
+
+Hardware mapping (Tofino -> TPU, DESIGN.md §2):
+  * the MAU stages' SRAM register arrays live in a VMEM scratch buffer for
+    the whole kernel invocation (the scratch persists across the sequential
+    TPU grid, like stage SRAM persists across packets),
+  * the packet stream is blocked into VMEM tiles of CHUNK instructions via
+    BlockSpec; grid steps execute in order, so instruction order == serial
+    order == the switch's pipeline admission order,
+  * per instruction, a scalar read-modify-write applies the opcode —
+    including CADD, the P4 constrained-write, which the vectorized affine
+    engine cannot express.
+
+This is the faithful-execution path; the affine-scan engine (core/engine)
+is the vectorized beyond-paper path.  Both are validated against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NOP, READ, WRITE, ADD, CADD = 0, 1, 2, 3, 4
+
+
+def _kernel(op_ref, g_ref, val_ref, regs_in_ref, regs_out_ref, res_ref,
+            ok_ref, scratch_ref, *, chunk, n_slots, n_chunks):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        scratch_ref[...] = regs_in_ref[...]
+
+    def body(i, _):
+        o = op_ref[i]
+        g = jnp.minimum(g_ref[i], n_slots - 1)
+        v = val_ref[i]
+        cur = scratch_ref[g]
+        post = cur + v
+        cadd_ok = post >= 0
+        new = jnp.where(o == WRITE, v,
+              jnp.where(o == ADD, post,
+              jnp.where((o == CADD) & cadd_ok, post, cur)))
+        res = jnp.where(o == READ, cur, jnp.where(o == NOP, 0, new))
+        ok = jnp.where(o == CADD, cadd_ok, True)
+        scratch_ref[g] = jnp.where(o == NOP, cur, new)
+        res_ref[i] = res
+        ok_ref[i] = ok.astype(jnp.int32)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, body, ())
+
+    @pl.when(step == n_chunks - 1)
+    def _fin():
+        regs_out_ref[...] = scratch_ref[...]
+
+
+def switch_txn_call(registers_flat, op, g, val, *, chunk=1024,
+                    interpret=True):
+    """registers_flat: [n_slots] int32; op/g/val: [N] int32 (N % chunk == 0).
+
+    Returns (new_registers [n_slots], results [N], ok [N] int32)."""
+    n_slots = registers_flat.shape[0]
+    n = op.shape[0]
+    assert n % chunk == 0, (n, chunk)
+    n_chunks = n // chunk
+    kernel = functools.partial(_kernel, chunk=chunk, n_slots=n_slots,
+                               n_chunks=n_chunks)
+    stream_spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    full_spec = pl.BlockSpec((n_slots,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[stream_spec, stream_spec, stream_spec, full_spec],
+        out_specs=[full_spec, stream_spec, stream_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_slots,), jnp.int32)],
+        interpret=interpret,
+    )(op, g, val, registers_flat)

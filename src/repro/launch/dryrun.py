@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract memory / cost / collective stats.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the device count at first init, and only the dry-run may see 512 fake host
+devices.  Everything else in the repo sees the real device(s).
+
+Each cell is lowered TWICE:
+  1. production form (lax.scan layers/chunks)  -> memory_analysis (what runs)
+  2. python-unrolled form (loop-free HLO)      -> cost_analysis + collective
+     bytes.  XLA's cost model counts while-loop bodies ONCE regardless of
+     trip count (verified empirically), so the scanned module would
+     undercount FLOPs/bytes by ~n_layers; the unrolled module is exact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+      --shape train_4k --mesh single [--out artifacts/dryrun] [overrides]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.common import hw
+from repro.common.types import SHAPES_BY_NAME, ParallelConfig, TrainConfig
+from repro.configs.registry import ALIASES, get as get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cache_specs, cell_is_applicable, input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import lm as LM
+from repro.optim import adamw
+from repro.parallel import sharding as Sh
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Per-device collective result bytes + estimated wire bytes.
+
+    Wire estimate per device (ring algorithms):
+      all-reduce       2 x result
+      all-gather       1 x result
+      reduce-scatter   result x group_size (operand bytes)
+      all-to-all       1 x result
+      collective-perm  1 x result
+    """
+    res = {k: 0 for k in COLLECTIVES}
+    wire = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        rtype, kind = m.group(1), m.group(2)
+        b = _shape_bytes(rtype)
+        res[kind] += b
+        counts[kind] += 1
+        if kind == "all-reduce":
+            wire[kind] += 2 * b
+        elif kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            size = int(g.group(2)) if g else 2
+            wire[kind] += b * size
+        else:
+            wire[kind] += b
+    res["total"] = sum(res[k] for k in COLLECTIVES)
+    wire["total"] = sum(wire[k] for k in COLLECTIVES)
+    return dict(result_bytes=res, wire_bytes=wire, counts=counts)
+
+
+def model_flops(cfg, shape):
+    """(useful_flops_global, params_total, params_active)."""
+    defs = LM.build_defs(cfg)
+    total = 0
+    active = 0.0
+    for name, d in defs.items():
+        n = int(np.prod(d.shape))
+        total += n
+        if cfg.moe and name.startswith("layers/e_"):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * active * tokens, total, active
+
+
+def build_cell(cfg, shape, mesh, plan):
+    params = LM.abstract_params(cfg)
+    p_sh = Sh.param_shardings(cfg, mesh)
+    b_specs = input_specs(cfg, shape)
+    b_sh = Sh.batch_shardings(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        tc = TrainConfig()
+        opt = adamw.abstract_state(params, plan.parallel.moment_dtype)
+        o_sh = adamw.state_shardings(p_sh, mesh, plan.parallel.moment_dtype)
+        fn = make_train_step(cfg, plan.parallel, tc)
+        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        args = (params, opt, b_specs)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, plan.parallel)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        args = (params, b_specs)
+    else:
+        fn = make_serve_step(cfg)
+        cache = cache_specs(cfg, shape)
+        c_sh = Sh.cache_shardings(cfg, shape.global_batch, shape.seq_len, mesh)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                         donate_argnums=(1,))
+        args = (params, cache, b_specs)
+    return jitted, args
+
+
+def _lower_compile(cfg, shape, mesh, plan):
+    from repro.parallel.ctx import mesh_axes
+    jitted, args = build_cell(cfg, shape, mesh, plan)
+    with mesh, mesh_axes(mesh.axis_names):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _probe_layer_counts(cfg):
+    if cfg.family == "hybrid":
+        return cfg.hybrid.attn_every, 2 * cfg.hybrid.attn_every
+    return 2, 4
+
+
+def unrolled_costs(cfg, shape, mesh, plan, full_unroll=False):
+    """Exact per-device flops / bytes / collectives of the loop-free module.
+
+    Layer stacks are homogeneous, so cost(L) is affine in L: compile two
+    reduced-depth unrolled probes and extrapolate exactly — compiling the
+    94-layer giants fully unrolled at 512-way SPMD is minutes per cell,
+    the probes are seconds.  --full-unroll does the real thing instead."""
+    def one(L):
+        c = dataclasses.replace(cfg, n_layers=L, unroll=True)
+        compiled = _lower_compile(c, shape, mesh, plan)
+        cost = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+        return dict(flops=float(cost.get("flops", 0.0)),
+                    bytes=float(cost.get("bytes accessed", 0.0)),
+                    coll_wire=dict(coll["wire_bytes"]),
+                    coll_res=dict(coll["result_bytes"]))
+
+    if full_unroll:
+        return one(cfg.n_layers), "full_unroll"
+    L1, L2 = _probe_layer_counts(cfg)
+    c1, c2 = one(L1), one(L2)
+    Lf = cfg.n_layers
+
+    def lin(v1, v2):
+        return v1 + (Lf - L1) * (v2 - v1) / (L2 - L1)
+
+    out = dict(flops=lin(c1["flops"], c2["flops"]),
+               bytes=lin(c1["bytes"], c2["bytes"]),
+               coll_wire={k: lin(c1["coll_wire"][k], c2["coll_wire"][k])
+                          for k in c1["coll_wire"]},
+               coll_res={k: lin(c1["coll_res"][k], c2["coll_res"][k])
+                         for k in c1["coll_res"]})
+    return out, f"probe_extrapolated_L{L1}_L{L2}"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             overrides=None, tag=""):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    os.makedirs(outdir, exist_ok=True)
+    stem = f"{ALIASES.get(arch, arch)}__{shape_name}__{mesh_kind}"
+    if tag:
+        stem += f"__{tag}"
+    path = os.path.join(outdir, stem + ".json")
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind, chips=n_chips,
+               status="skip", tag=tag)
+    if not cell_is_applicable(cfg, shape):
+        rec["reason"] = "long_500k requires sub-quadratic attention"
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"SKIP {arch} {shape_name} {mesh_kind}")
+        return rec
+
+    overrides = overrides or {}
+    cfg_over = {k: v for k, v in overrides.items()
+                if k in ("q_chunk", "kv_chunk")}
+    par_over = {k: v for k, v in overrides.items()
+                if k in ("remat", "microbatch", "moment_dtype", "seq_axis",
+                         "moe_token_motion", "moe_arbitration_shards")}
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    parallel = ParallelConfig(**par_over) if par_over else None
+    plan = Sh.make_plan(cfg, shape, mesh, parallel)
+
+    # pass 1: production (scanned) module -> memory analysis
+    compiled = _lower_compile(cfg, shape, mesh, plan)
+    mem = compiled.memory_analysis()
+    t1 = time.time()
+
+    # pass 2: loop-free probes -> exact flops / bytes / collectives
+    costs, method = unrolled_costs(cfg, shape, mesh, plan,
+                                   overrides.get("full_unroll", False))
+    t2 = time.time()
+
+    mf, n_total, n_active = model_flops(cfg, shape)
+    flops = costs["flops"]
+    bytes_accessed = costs["bytes"]
+    coll = dict(wire_bytes=costs["coll_wire"], result_bytes=costs["coll_res"])
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / hw.HBM_BW
+    collective_s = coll["wire_bytes"]["total"] / hw.ICI_LINK_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    mfd = mf / n_chips
+
+    rec.update(
+        status="ok",
+        cost_method=method,
+        compile_scanned_s=round(t1 - t0, 1),
+        compile_unrolled_s=round(t2 - t1, 1),
+        microbatch=plan.microbatch, moment_dtype=plan.parallel.moment_dtype,
+        remat=plan.parallel.remat,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        per_device=dict(
+            flops=flops, bytes_accessed=bytes_accessed,
+            collective=coll,
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_bytes=mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        ),
+        roofline=dict(
+            **terms, dominant=dominant,
+            model_flops_global=mf, params_total=n_total,
+            params_active=n_active, model_flops_per_device=mfd,
+            useful_ratio=mfd / max(flops, 1.0),
+            step_time_lower_bound_s=max(terms.values()),
+            mfu_bound=mfd / hw.PEAK_FLOPS_BF16 / max(terms.values())),
+    )
+    json.dump(rec, open(path, "w"), indent=1)
+    print(f"OK {arch} {shape_name} {mesh_kind}{' ' + tag if tag else ''}: "
+          f"compile={t1 - t0:.0f}+{t2 - t1:.0f}s "
+          f"flops/dev={flops:.3e} hbm/dev={bytes_accessed:.3e} "
+          f"wire/dev={coll['wire_bytes']['total']:.3e} dom={dominant} "
+          f"peak={rec['per_device']['peak_bytes'] / 1e9:.1f}GB "
+          f"mfu_bound={rec['roofline']['mfu_bound']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatch", type=int)
+    ap.add_argument("--remat", choices=["none", "full", "dots"])
+    ap.add_argument("--moment-dtype", choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--q-chunk", type=int)
+    ap.add_argument("--kv-chunk", type=int)
+    ap.add_argument("--full-unroll", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--token-motion", action="store_true")
+    ap.add_argument("--moe-shards", type=int)
+    args = ap.parse_args()
+    overrides = {k: v for k, v in dict(
+        microbatch=args.microbatch, remat=args.remat,
+        moment_dtype=args.moment_dtype, q_chunk=args.q_chunk,
+        kv_chunk=args.kv_chunk).items() if v is not None}
+    if args.seq_parallel:
+        overrides["seq_axis"] = "model"
+    if args.token_motion:
+        overrides["moe_token_motion"] = True
+    if args.moe_shards:
+        overrides["moe_arbitration_shards"] = args.moe_shards
+    if args.full_unroll:
+        overrides["full_unroll"] = True
+    try:
+        run_cell(args.arch, args.shape, args.mesh, args.out, overrides,
+                 args.tag)
+    except Exception:
+        traceback.print_exc()
+        rec = dict(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                   status="error", tag=args.tag,
+                   error=traceback.format_exc()[-3000:])
+        os.makedirs(args.out, exist_ok=True)
+        stem = f"{ALIASES.get(args.arch, args.arch)}__{args.shape}__{args.mesh}"
+        if args.tag:
+            stem += f"__{args.tag}"
+        json.dump(rec, open(os.path.join(args.out, stem + ".json"), "w"),
+                  indent=1)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

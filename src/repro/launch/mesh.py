@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+nothing else in the codebase ever does.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(min(model, n // data), 1)
+    return jax.make_mesh((data, model), ("data", "model"))

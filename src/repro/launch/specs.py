@@ -1,0 +1,57 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch, shape) cell.
+
+Stub frontends per the assignment: [vlm] provides precomputed patch
+embeddings, [audio] precomputed frame embeddings — the backbone is what is
+lowered/compiled."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig, ShapeConfig
+from repro.models import decode as Dm
+
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns the batch pytree of ShapeDtypeStructs."""
+    B, L = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        if cfg.frontend == "audio_stub":
+            out["frames"] = sds((B, L, cfg.d_model), dt)
+        elif cfg.frontend == "vision_stub":
+            Np = cfg.n_frontend_tokens
+            out["patches"] = sds((B, Np, cfg.d_model), dt)
+            out["tokens"] = sds((B, L - Np), I32)
+        else:
+            out["tokens"] = sds((B, L), I32)
+        if shape.kind == "train":
+            out["labels"] = sds((B, L), I32)
+        return out
+    # decode: one new token against a cache of L entries
+    out = {"pos": sds((B,), I32)}
+    if cfg.frontend == "audio_stub":
+        out["frames"] = sds((B, cfg.d_model), dt)
+    else:
+        out["tokens"] = sds((B,), I32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    assert shape.kind == "decode"
+    return Dm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k requires sub-quadratic architectures (SSM/hybrid); the pure
+    full-attention archs skip it (recorded in DESIGN.md / EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True

@@ -1,0 +1,87 @@
+"""Step functions: train_step (with gradient accumulation), prefill_step,
+serve_step (single-token decode).  These are the functions the dry-run
+lowers and the trainer jits."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.types import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+from repro.models import lm
+from repro.models.decode import decode_step
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
+                    tc: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation: the batch's leading dim is split into
+    parallel.microbatch chunks scanned sequentially; grads are accumulated
+    in fp32 (bf16 for the MoE giants to halve the buffer)."""
+    mb = max(parallel.microbatch, 1)
+    accum_dtype = jnp.bfloat16 if cfg.family == "moe" else jnp.float32
+
+    def loss_of(params, batch):
+        total, metrics = lm.loss_fn(cfg, params, batch, parallel)
+        return total, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            if cfg.unroll:
+                # dry-run probes: python loop so every microbatch's FLOPs /
+                # collectives are visible in the loop-free HLO (XLA counts
+                # while-loop bodies once)
+                carry = (g0, 0.0)
+                for i in range(mb):
+                    carry, _ = acc_body(
+                        carry, jax.tree.map(lambda x: x[i], split))
+                grads, loss = carry
+            else:
+                (grads, loss), _ = lax.scan(acc_body, (g0, 0.0), split)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = {}
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt_state, tc, parallel.moment_dtype)
+        out_metrics = {"loss": loss, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, parallel: Optional[ParallelConfig]
+                      = None):
+    def prefill_step(params, batch):
+        logits, cache, _ = lm.forward(cfg, params, batch, parallel,
+                                      collect_cache=True)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, new_cache = decode_step(cfg, params, cache, batch)
+        return logits, new_cache
+    return serve_step

@@ -1,0 +1,97 @@
+"""Training launcher: fault-tolerant loop with checkpoint/restart,
+deterministic step-indexed data, straggler detection, async checkpointing.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 50 --batch 8 --seq 128 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.common.types import (ParallelConfig, ShapeConfig, TrainConfig)
+from repro.configs.registry import get as get_config, get_smoke
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_train_step
+from repro.models import lm as LM
+from repro.optim import adamw
+from repro.parallel import sharding as Sh
+from repro.parallel.ctx import mesh_axes
+
+
+def train(arch: str, steps: int, batch: int, seq: int, smoke: bool,
+          ckpt_dir: str, ckpt_every: int = 20, resume: bool = True,
+          straggler_factor: float = 5.0):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    mesh = make_local_mesh(data=1, model=1)
+    shape = ShapeConfig("custom", "train", seq, batch)
+    plan = Sh.make_plan(cfg, shape, mesh,
+                        ParallelConfig(remat="none", microbatch=1))
+    tc = TrainConfig(warmup_steps=10)
+
+    params = LM.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init_state(params, plan.parallel.moment_dtype)
+    ck = Checkpointer(ckpt_dir)
+    start = 0
+    if resume and ck.latest_step() is not None:
+        start, tree = ck.restore()
+        params, opt_m = tree["params"], tree["opt_m"]
+        opt = adamw.AdamWState(
+            jnp.asarray(tree["opt_meta"]["step"]),
+            opt_m["m"], opt_m["m_scale"], opt_m["v"], opt_m["v_scale"])
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, plan.parallel, tc),
+                      donate_argnums=(0, 1))
+    data = SyntheticLM(cfg, seq, batch)
+    times = []
+    with mesh, mesh_axes(mesh.axis_names):
+        for step in range(start, steps):
+            t0 = time.time()
+            batch_np = data.batch(step)
+            batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt, metrics = step_fn(params, opt, batch_dev)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            # straggler detection: flag steps far beyond the running median
+            times.append(dt)
+            med = sorted(times)[len(times) // 2]
+            flag = " STRAGGLER" if len(times) > 5 and dt > straggler_factor \
+                * med else ""
+            print(f"step {step:5d} loss {loss:.4f} {dt * 1e3:7.1f}ms{flag}",
+                  flush=True)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}")
+            if (step + 1) % ckpt_every == 0 or step + 1 == steps:
+                ck.save(step + 1, dict(
+                    params=params,
+                    opt_m=dict(m=opt.m, m_scale=opt.m_scale, v=opt.v,
+                               v_scale=opt.v_scale),
+                    opt_meta=dict(step=opt.step)))
+    ck.wait()
+    return params, float(metrics["loss"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, args.steps, args.batch, args.seq, args.smoke,
+          args.ckpt_dir, args.ckpt_every, resume=not args.no_resume)
+
+
+if __name__ == "__main__":
+    main()

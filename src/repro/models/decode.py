@@ -1,0 +1,204 @@
+"""Serving: KV-cache / recurrent-state construction and single-token decode.
+
+decode_step consumes a cache pytree plus per-row positions and produces the
+next-token logits and the updated cache.  Cache layouts (leading dim = layer
+scan axis) are declared here so launch/dryrun can build abstract caches with
+the right shapes and shardings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.types import ModelConfig
+from repro.models.layers import (apply_rope, decode_attention, rms_norm,
+                                 rope_cos_sin)
+from repro.models.lm import _mlp_block, _scan, embed_inputs, lm_head
+from repro.models.mamba2 import mamba2_forward
+from repro.models.moe import capacity_for, moe_ffn
+from repro.models.rwkv6 import rwkv6_channel_mix, rwkv6_time_mix
+from repro.models import params as P
+
+
+# ----------------------------------------------------- cache structure ----
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Dict of (shape, dtype, logical axes) for the decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim()
+    G, L = cfg.n_kv_heads, cfg.n_layers
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads_cache", None)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        return {
+            "k": ((L, batch, max_len, G, dh), dt, kv_axes),
+            "v": ((L, batch, max_len, G, dh), dt, kv_axes),
+        }
+    if cfg.family == "rwkv":
+        dm, H = cfg.d_model, cfg.n_heads
+        C = dm // H
+        return {
+            "tm_x": ((L, batch, dm), dt, ("layers", "batch", None)),
+            "cm_x": ((L, batch, dm), dt, ("layers", "batch", None)),
+            "S": ((L, batch, H, C, C), jnp.float32,
+                  ("layers", "batch", "heads_state", None, None)),
+        }
+    if cfg.family == "hybrid":
+        ssm = cfg.ssm
+        di = ssm.expand * cfg.d_model
+        H = di // ssm.headdim
+        groups = cfg.n_layers // cfg.hybrid.attn_every
+        ke = cfg.hybrid.attn_every
+        N, K = ssm.d_state, ssm.d_conv
+        return {
+            "ssm": ((groups, ke, batch, H, N, ssm.headdim), jnp.float32,
+                    ("layers", "layers2", "batch", "heads_state", None, None)),
+            "conv_x": ((groups, ke, batch, K - 1, di), dt,
+                       ("layers", "layers2", "batch", None, "ssm_inner")),
+            "conv_bc": ((groups, ke, batch, K - 1, 2 * N), dt,
+                        ("layers", "layers2", "batch", None, None)),
+            "k": ((groups, batch, max_len, G, dh), dt, kv_axes),
+            "v": ((groups, batch, max_len, G, dh), dt, kv_axes),
+        }
+    raise ValueError(cfg.family)
+
+
+def _normalize(spec):
+    return {name: (tuple(s), jnp.dtype(d), a) for name, (s, d, a) in
+            spec.items()}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    spec = _normalize(cache_spec(cfg, batch, max_len))
+    return {n: jax.ShapeDtypeStruct(s, d) for n, (s, d, _) in spec.items()}
+
+
+def zero_cache(cfg: ModelConfig, batch: int, max_len: int):
+    spec = _normalize(cache_spec(cfg, batch, max_len))
+    return {n: jnp.zeros(s, d) for n, (s, d, _) in spec.items()}
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    spec = _normalize(cache_spec(cfg, 1, 1))
+    return {n: a for n, (s, d, a) in spec.items()}
+
+
+# -------------------------------------------------------- decode bodies ----
+
+def _write_kv(k_cache, v_cache, k_new, v_new, pos):
+    """k_cache: [B, Lmax, G, dh]; k_new: [B, G, dh]; pos: [B]."""
+    upd = lambda c, n, p: lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+    k_cache = jax.vmap(upd)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+    return k_cache, v_cache
+
+
+def _attn_decode(cfg, lp, x, pre, k_cache, v_cache, pos, cos, sin):
+    """x: [B, D] single token.  Returns (x, k_cache, v_cache)."""
+    B, dm = x.shape
+    H, G, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    h = rms_norm(x, lp[f"{pre}attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bd,de->be", h, lp[f"{pre}wq"])
+    k = jnp.einsum("bd,de->be", h, lp[f"{pre}wk"])
+    v = jnp.einsum("bd,de->be", h, lp[f"{pre}wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp[f"{pre}bq"], k + lp[f"{pre}bk"], v + lp[f"{pre}bv"]
+    q = apply_rope(q.reshape(B, 1, H, dh), cos, sin)[:, 0]
+    k = apply_rope(k.reshape(B, 1, G, dh), cos, sin)[:, 0]
+    v = v.reshape(B, G, dh)
+    k_cache, v_cache = _write_kv(k_cache, v_cache, k, v, pos)
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    o = jnp.einsum("be,ed->bd", o.astype(x.dtype).reshape(B, H * dh),
+                   lp[f"{pre}wo"])
+    return x + o, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One decode step.
+
+    batch: tokens [B] int32 (or frames [B, D] for audio), pos [B] int32 —
+    index where the new token's KV/state is written; attends over pos+1.
+    Returns (logits [B, V], new_cache).
+    """
+    pos = batch["pos"]
+    if cfg.frontend == "audio_stub":
+        x = batch["frames"].astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.dtype)
+    B, dm = x.shape
+    dh = cfg.resolved_head_dim()
+    cos, sin = rope_cos_sin(pos[:, None], dh, cfg.rope_theta)  # [B,1,dh/2]
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        capacity = capacity_for(B, cfg.moe) if cfg.family == "moe" else 0
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            x, kc, vc = _attn_decode(cfg, lp, x, "", kc, vc, pos, cos, sin)
+            if cfg.family == "moe":
+                h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+                eparams = dict(router=lp["router"], w_gate=lp["e_gate"],
+                               w_up=lp["e_up"], w_down=lp["e_down"])
+                y, _ = moe_ffn(h, eparams, cfg.moe, jax.nn.silu, capacity)
+                x = x + y
+                if cfg.moe.n_shared_experts:
+                    from repro.models.layers import gated_mlp
+                    x = x + gated_mlp(h, lp["se_gate"], lp["se_up"],
+                                      lp["se_down"], "silu").astype(x.dtype)
+            else:
+                x = _mlp_block(cfg, lp, x[:, None, :], "")[:, 0]
+            return x, (kc, vc)
+
+        x, (k_new, v_new) = _scan(body, x, (params["layers"], cache["k"],
+                                                  cache["v"]), cfg.unroll)
+        new_cache = dict(cache, k=k_new, v=v_new)
+
+    elif cfg.family == "rwkv":
+        def body(x, xs):
+            lp, tmx, cmx, S = xs
+            h = rms_norm(x[:, None, :], lp["tm_norm"], cfg.norm_eps)
+            o, (ltm, S2) = rwkv6_time_mix(h, lp["tm"], cfg.n_heads,
+                                          cfg.rwkv.chunk, last_x=tmx, state=S)
+            x = x + o[:, 0]
+            h = rms_norm(x[:, None, :], lp["cm_norm"], cfg.norm_eps)
+            o, lcm = rwkv6_channel_mix(h, lp["cm"], last_x=cmx)
+            x = x + o[:, 0]
+            return x, (ltm, lcm, S2)
+        x, (tmx, cmx, S) = _scan(
+            body, x, (params["layers"], cache["tm_x"], cache["cm_x"],
+                      cache["S"]), cfg.unroll)
+        new_cache = dict(tm_x=tmx, cm_x=cmx, S=S)
+
+    elif cfg.family == "hybrid":
+        def group_body(x, xs):
+            gp, ssm_s, cx_s, cb_s, kc, vc = xs
+
+            def inner(x, ys):
+                lp, s, cx, cb = ys
+                st = dict(ssm=s, conv_x=cx, conv_bc=cb)
+                o, st2 = mamba2_forward(x[:, None, :], lp, cfg, cfg.ssm,
+                                        train=False, state=st)
+                return x + o[:, 0], (st2["ssm"], st2["conv_x"], st2["conv_bc"])
+            x, (s2, cx2, cb2) = _scan(inner, x, (gp, ssm_s, cx_s, cb_s),
+                                      cfg.unroll)
+            x, kc, vc = _attn_decode(cfg, params["shared"], x, "", kc, vc,
+                                     pos, cos, sin)
+            x = _mlp_block(cfg, params["shared"], x[:, None, :], "")[:, 0]
+            return x, (s2, cx2, cb2, kc, vc)
+
+        ke = cfg.hybrid.attn_every
+        groups = cfg.n_layers // ke
+        mp = jax.tree.map(lambda a: a.reshape((groups, ke) + a.shape[1:]),
+                          params["layers"])
+        x, (s2, cx2, cb2, kc, vc) = _scan(
+            group_body, x, (mp, cache["ssm"], cache["conv_x"],
+                            cache["conv_bc"], cache["k"], cache["v"]),
+            cfg.unroll)
+        new_cache = dict(ssm=s2, conv_x=cx2, conv_bc=cb2, k=kc, v=vc)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = lm_head(cfg, params, x[:, None, :])[:, 0]
+    return logits, new_cache

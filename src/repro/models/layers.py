@@ -1,0 +1,175 @@
+"""Core transformer layers: RMSNorm, RoPE, chunked (online-softmax) causal
+attention, GQA decode attention, gated/plain MLPs.  Pure functions over
+param dicts; everything jnp so XLA/SPMD can partition freely."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+def rope_cos_sin(positions, head_dim, theta):
+    """positions: int32 [...]. Returns cos/sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., L, H, D]; cos/sin: [..., L, D//2] broadcast over heads."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------- chunked causal attention ----
+
+def chunked_causal_attention(q, k, v, q_chunk, kv_chunk, causal_offset=0,
+                             unroll=False):
+    """Blockwise online-softmax causal attention (flash-style, pure jnp).
+
+    q: [B, Lq, H, D]   k/v: [B, Lk, G, D]  with H = G * rep (GQA).
+    causal_offset: position of q[0] minus position of k[0] (for prefixes,
+    e.g. vision tokens attend bidirectionally is NOT supported — causal only).
+    unroll=True replaces the scans with python loops over q-chunks against
+    full K — used by the dry-run so HLO costs are not hidden in while-loop
+    bodies (XLA counts loop bodies once).
+    Returns [B, Lq, H, D].
+    """
+    if unroll:
+        return _unrolled_causal_attention(q, k, v, q_chunk, causal_offset)
+    B, Lq, H, D = q.shape
+    _, Lk, G, _ = k.shape
+    rep = H // G
+    q_chunk = min(q_chunk, Lq)
+    kv_chunk = min(kv_chunk, Lk)
+    nq, nk = Lq // q_chunk, Lk // kv_chunk
+    assert Lq % q_chunk == 0 and Lk % kv_chunk == 0
+
+    qg = q.reshape(B, nq, q_chunk, G, rep, D)
+    kg = k.reshape(B, nk, kv_chunk, G, D)
+    vg = v.reshape(B, nk, kv_chunk, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    q_pos = (jnp.arange(nq)[:, None] * q_chunk + jnp.arange(q_chunk)[None, :]
+             + causal_offset)                                   # [nq, qc]
+    k_pos = jnp.arange(nk)[:, None] * kv_chunk + jnp.arange(kv_chunk)[None, :]
+
+    def q_block(qi, qb):
+        # qb: [B, qc, G, rep, D]
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb = kg[:, ki]                                      # [B, kc, G, D]
+            vb = vg[:, ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = q_pos[qi][:, None] >= k_pos[ki][None, :]      # [qc, kc]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, G, rep, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)                     # [B, qc, G, rep, D]
+
+    outs = lax.map(lambda qi: q_block(qi, qg[:, qi]), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Lq, H, D)
+    return out
+
+
+def _unrolled_causal_attention(q, k, v, q_chunk, causal_offset=0):
+    """Python-loop q-chunks x full-K attention (loop-free HLO)."""
+    B, Lq, H, D = q.shape
+    _, Lk, G, _ = k.shape
+    rep = H // G
+    q_chunk = min(q_chunk, Lq)
+    nq = Lq // q_chunk
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    k_pos = jnp.arange(Lk)
+    outs = []
+    for qi in range(nq):
+        qb = q[:, qi * q_chunk:(qi + 1) * q_chunk].reshape(
+            B, q_chunk, G, rep, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + causal_offset
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        outs.append(o.reshape(B, q_chunk, H, D))
+    return jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: [B, H, D]; k_cache/v_cache: [B, Lmax, G, D]; lengths: [B] int32 —
+    number of valid cache entries (the new token's KV must already be
+    written at position lengths-1).
+    """
+    B, H, D = q.shape
+    _, Lmax, G, _ = k_cache.shape
+    rep = H // G
+    qg = q.reshape(B, G, rep, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.einsum("bgrd,blgd->bgrl", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Lmax)[None] < lengths[:, None]            # [B, Lmax]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrl,blgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D)
+
+
+# ------------------------------------------------------------------ MLP ----
+
+def _act(x, kind):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu_sq":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def gated_mlp(x, w_gate, w_up, w_down, act):
+    g = _act(jnp.einsum("...d,df->...f", x, w_gate), act)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", (g * u.astype(g.dtype)).astype(x.dtype),
+                      w_down)
+
+
+def plain_mlp(x, w_up, b_up, w_down, b_down, act):
+    h = _act(jnp.einsum("...d,df->...f", x, w_up) + b_up, kind=act)
+    return jnp.einsum("...f,fd->...d", h.astype(x.dtype), w_down) + b_down

@@ -1,0 +1,408 @@
+"""Unified causal LM covering all assigned architecture families.
+
+Families:
+  dense   — llama-style GQA attention + (gated|plain) MLP
+  moe     — GQA attention + MoE FFN (P4DB switch-engine capacity arbitration)
+  rwkv    — RWKV6 time-mix / channel-mix (attention-free)
+  hybrid  — Zamba2: Mamba2 blocks + one weight-shared attention block every k
+  vlm     — dense backbone, patch-embedding prefix from a stub frontend
+  audio   — dense backbone over precomputed frame embeddings (stub frontend)
+
+Single source of truth for parameters is ``build_defs`` (shapes + logical
+sharding axes + init); everything is pure jnp so pjit/SPMD can partition.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.types import ModelConfig, ShapeConfig
+from repro.models import params as P
+from repro.models.layers import (apply_rope, chunked_causal_attention,
+                                 decode_attention, gated_mlp, plain_mlp,
+                                 rms_norm, rope_cos_sin)
+from repro.models.mamba2 import mamba2_forward
+from repro.models.moe import (capacity_for, load_balance_loss, moe_ffn,
+                              moe_ffn_sharded)
+from repro.models.rwkv6 import rwkv6_channel_mix, rwkv6_time_mix
+
+D = P.ParamDef
+
+
+# ------------------------------------------------------------- defs ------
+
+def _attn_defs(pre: str, L: int, cfg: ModelConfig) -> Dict[str, D]:
+    dm, H, G = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim()
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    d = {
+        f"{pre}attn_norm": D(lead + (dm,), la + ("embed",), "ones"),
+        f"{pre}wq": D(lead + (dm, H * dh), la + ("embed", "heads"), "fan_in"),
+        f"{pre}wk": D(lead + (dm, G * dh), la + ("embed", "kv_heads"), "fan_in"),
+        f"{pre}wv": D(lead + (dm, G * dh), la + ("embed", "kv_heads"), "fan_in"),
+        f"{pre}wo": D(lead + (H * dh, dm), la + ("heads", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        d[f"{pre}bq"] = D(lead + (H * dh,), la + ("heads",), "zeros")
+        d[f"{pre}bk"] = D(lead + (G * dh,), la + ("kv_heads",), "zeros")
+        d[f"{pre}bv"] = D(lead + (G * dh,), la + ("kv_heads",), "zeros")
+    return d
+
+
+def _mlp_defs(pre: str, L: int, cfg: ModelConfig, d_ff=None, gated=None):
+    dm, F = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.mlp_gated if gated is None else gated
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    d = {f"{pre}mlp_norm": D(lead + (dm,), la + ("embed",), "ones")}
+    if gated:
+        d[f"{pre}w_gate"] = D(lead + (dm, F), la + ("embed", "ff"), "fan_in")
+        d[f"{pre}w_up"] = D(lead + (dm, F), la + ("embed", "ff"), "fan_in")
+        d[f"{pre}w_down"] = D(lead + (F, dm), la + ("ff", "embed"), "fan_in")
+    else:
+        d[f"{pre}w_up"] = D(lead + (dm, F), la + ("embed", "ff"), "fan_in")
+        d[f"{pre}b_up"] = D(lead + (F,), la + ("ff",), "zeros")
+        d[f"{pre}w_down"] = D(lead + (F, dm), la + ("ff", "embed"), "fan_in")
+        d[f"{pre}b_down"] = D(lead + (dm,), la + ("embed",), "zeros")
+    return d
+
+
+def _mamba_defs(pre: str, L: int, cfg: ModelConfig):
+    ssm = cfg.ssm
+    dm = cfg.d_model
+    di = ssm.expand * dm
+    H = di // ssm.headdim
+    N, K = ssm.d_state, ssm.d_conv
+    return {
+        f"{pre}norm": D((L, dm), ("layers", "embed"), "ones"),
+        f"{pre}wz": D((L, dm, di), ("layers", "embed", "ssm_inner"), "fan_in"),
+        f"{pre}wx": D((L, dm, di), ("layers", "embed", "ssm_inner"), "fan_in"),
+        f"{pre}wbc": D((L, dm, 2 * N), ("layers", "embed", None), "fan_in"),
+        f"{pre}wdt": D((L, dm, H), ("layers", "embed", "ssm_inner"), "fan_in"),
+        f"{pre}dt_bias": D((L, H), ("layers", "ssm_inner"), "zeros"),
+        f"{pre}A_log": D((L, H), ("layers", "ssm_inner"), "normal", 0.5),
+        f"{pre}D": D((L, H), ("layers", "ssm_inner"), "ones"),
+        f"{pre}conv_x_w": D((L, di, K), ("layers", "ssm_inner", None), "normal", 0.2),
+        f"{pre}conv_x_b": D((L, di), ("layers", "ssm_inner"), "zeros"),
+        f"{pre}conv_bc_w": D((L, 2 * N, K), ("layers", None, None), "normal", 0.2),
+        f"{pre}conv_bc_b": D((L, 2 * N), ("layers", None), "zeros"),
+        f"{pre}norm_inner": D((L, di), ("layers", "ssm_inner"), "ones"),
+        f"{pre}wo": D((L, di, dm), ("layers", "ssm_inner", "embed"), "fan_in"),
+    }
+
+
+def _rwkv_defs(L: int, cfg: ModelConfig):
+    dm, F = cfg.d_model, cfg.d_ff
+    R = cfg.rwkv.decay_lora
+    mus = {f"layers/tm/mu_{n}": D((L, dm), ("layers", "embed"), "normal", 0.1)
+           for n in ("r", "k", "v", "g", "w")}
+    d = {
+        "layers/tm_norm": D((L, dm), ("layers", "embed"), "ones"),
+        **mus,
+        "layers/tm/wr": D((L, dm, dm), ("layers", "embed", "heads"), "fan_in"),
+        "layers/tm/wk": D((L, dm, dm), ("layers", "embed", "heads"), "fan_in"),
+        "layers/tm/wv": D((L, dm, dm), ("layers", "embed", "heads"), "fan_in"),
+        "layers/tm/wg": D((L, dm, dm), ("layers", "embed", "heads"), "fan_in"),
+        "layers/tm/w_lora_a": D((L, dm, R), ("layers", "embed", None), "fan_in"),
+        "layers/tm/w_lora_b": D((L, R, dm), ("layers", None, "heads"), "fan_in"),
+        "layers/tm/w0": D((L, dm), ("layers", "heads"), "normal", 0.3),
+        "layers/tm/u": D((L, dm), ("layers", "heads"), "normal", 0.3),
+        "layers/tm/ln_out": D((L, dm), ("layers", "heads"), "ones"),
+        "layers/tm/wo": D((L, dm, dm), ("layers", "heads", "embed"), "fan_in"),
+        "layers/cm_norm": D((L, dm), ("layers", "embed"), "ones"),
+        "layers/cm/mu_k": D((L, dm), ("layers", "embed"), "normal", 0.1),
+        "layers/cm/mu_r": D((L, dm), ("layers", "embed"), "normal", 0.1),
+        "layers/cm/wk": D((L, dm, F), ("layers", "embed", "ff"), "fan_in"),
+        "layers/cm/wv": D((L, F, dm), ("layers", "ff", "embed"), "fan_in"),
+        "layers/cm/wr": D((L, dm, dm), ("layers", "embed", "heads"), "fan_in"),
+    }
+    return d
+
+
+def _moe_defs(L: int, cfg: ModelConfig):
+    m = cfg.moe
+    dm, Fe, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    d = {
+        "layers/router": D((L, dm, E), ("layers", "embed", None), "normal", 0.02,
+                           dtype="float32"),
+        "layers/e_gate": D((L, E, dm, Fe), ("layers", "experts", "embed", "ff"),
+                           "fan_in"),
+        "layers/e_up": D((L, E, dm, Fe), ("layers", "experts", "embed", "ff"),
+                         "fan_in"),
+        "layers/e_down": D((L, E, Fe, dm), ("layers", "experts", "ff", "embed"),
+                           "fan_in"),
+    }
+    if m.n_shared_experts:
+        Fs = Fe * m.n_shared_experts
+        d["layers/se_gate"] = D((L, dm, Fs), ("layers", "embed", "ff"), "fan_in")
+        d["layers/se_up"] = D((L, dm, Fs), ("layers", "embed", "ff"), "fan_in")
+        d["layers/se_down"] = D((L, Fs, dm), ("layers", "ff", "embed"), "fan_in")
+    return d
+
+
+def build_defs(cfg: ModelConfig) -> Dict[str, D]:
+    L, dm, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    defs: Dict[str, D] = {"final_norm": D((dm,), ("embed",), "ones")}
+    if cfg.frontend != "audio_stub":
+        defs["embed"] = D((V, dm), ("vocab", "embed"), "normal", 0.02)
+    if not cfg.tie_embeddings:
+        defs["head"] = D((V, dm), ("vocab", "embed"), "fan_in")
+    if cfg.family in ("dense", "vlm", "audio"):
+        defs.update(_attn_defs("layers/", L, cfg))
+        defs.update(_mlp_defs("layers/", L, cfg))
+    elif cfg.family == "moe":
+        defs.update(_attn_defs("layers/", L, cfg))
+        defs["layers/mlp_norm"] = D((L, dm), ("layers", "embed"), "ones")
+        defs.update(_moe_defs(L, cfg))
+    elif cfg.family == "rwkv":
+        defs.update(_rwkv_defs(L, cfg))
+    elif cfg.family == "hybrid":
+        defs.update(_mamba_defs("layers/", L, cfg))
+        defs.update(_attn_defs("shared/", 0, cfg))
+        defs.update(_mlp_defs("shared/", 0, cfg))
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+def init_params(cfg: ModelConfig, key):
+    return P.init_params(build_defs(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return P.abstract_params(build_defs(cfg), jnp.dtype(cfg.dtype))
+
+
+# -------------------------------------------------------- embeddings ------
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """Returns x: [B, L, D] combining token / stub-frontend embeddings."""
+    if cfg.frontend == "audio_stub":
+        return batch["frames"].astype(cfg.dtype)
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.dtype)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        return jnp.concatenate([batch["patches"].astype(cfg.dtype), tok], axis=1)
+    return tok
+
+
+def constrain(x, *dims):
+    """Best-effort sharding constraint using whatever mesh axes exist.
+
+    dims: per-array-dim tuples of candidate mesh axis names (or None).
+    Axis names come from the launcher's parallel.ctx context; outside a
+    launcher (plain CPU smoke tests) this is a no-op."""
+    from repro.parallel.ctx import current_axes
+    names = set(current_axes())
+    if not names:
+        return x
+    from jax.sharding import PartitionSpec as PS
+    parts = []
+    for d in dims:
+        cand = d if isinstance(d, tuple) else (d,)
+        keep = tuple(a for a in cand if a is not None and a in names)
+        parts.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return jax.lax.with_sharding_constraint(x, PS(*parts))
+
+
+def lm_head(cfg: ModelConfig, params, x):
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bld,vd->blv", h, w,
+                        preferred_element_type=jnp.float32)
+    # keep logits vocab-sharded: without this XLA may all-gather the full
+    # [tokens, V] fp32 tensor per device (tens of GB at 150K vocabs)
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+# ------------------------------------------------------- block bodies ----
+
+def _attn_block(cfg, lp, x, pre, cos, sin, q_chunk, kv_chunk):
+    B, L, dm = x.shape
+    H, G, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    h = rms_norm(x, lp[f"{pre}attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bld,de->ble", h, lp[f"{pre}wq"])
+    k = jnp.einsum("bld,de->ble", h, lp[f"{pre}wk"])
+    v = jnp.einsum("bld,de->ble", h, lp[f"{pre}wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp[f"{pre}bq"], k + lp[f"{pre}bk"], v + lp[f"{pre}bv"]
+    q = apply_rope(q.reshape(B, L, H, dh), cos, sin)
+    k = apply_rope(k.reshape(B, L, G, dh), cos, sin)
+    v = v.reshape(B, L, G, dh)
+    o = chunked_causal_attention(q, k, v, q_chunk, kv_chunk,
+                                 unroll=cfg.unroll)
+    o = jnp.einsum("ble,ed->bld", o.astype(x.dtype).reshape(B, L, H * dh),
+                   lp[f"{pre}wo"])
+    return x + o, (k, v)
+
+
+def _mlp_block(cfg, lp, x, pre, d_ff=None):
+    h = rms_norm(x, lp[f"{pre}mlp_norm"], cfg.norm_eps)
+    if f"{pre}w_gate" in lp:
+        o = gated_mlp(h, lp[f"{pre}w_gate"], lp[f"{pre}w_up"], lp[f"{pre}w_down"],
+                      cfg.act)
+    else:
+        o = plain_mlp(h, lp[f"{pre}w_up"], lp[f"{pre}b_up"], lp[f"{pre}w_down"],
+                      lp[f"{pre}b_down"], cfg.act)
+    return x + o.astype(x.dtype)
+
+
+def _moe_block(cfg, lp, x, capacity, token_motion=False, arb_shards=1):
+    B, L, dm = x.shape
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    flat = h.reshape(B * L, dm)
+    eparams = dict(router=lp["router"], w_gate=lp["e_gate"], w_up=lp["e_up"],
+                   w_down=lp["e_down"])
+    if arb_shards > 1:
+        y, plan = moe_ffn_sharded(flat, eparams, cfg.moe, jax.nn.silu,
+                                  capacity, arb_shards)
+    else:
+        y, plan = moe_ffn(flat, eparams, cfg.moe, jax.nn.silu, capacity,
+                          token_motion=token_motion)
+    out = x + y.reshape(B, L, dm)
+    if cfg.moe.n_shared_experts:
+        s = gated_mlp(h, lp["se_gate"], lp["se_up"], lp["se_down"], "silu")
+        out = out + s.astype(x.dtype)
+    return out, plan
+
+
+# ------------------------------------------------------- full forward ----
+
+def _scan(body, carry, xs, unroll):
+    """lax.scan, or a python loop producing identical results when
+    unroll=True (dry-run: keeps HLO loop-free so costs are exact)."""
+    if not unroll:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def forward(cfg: ModelConfig, params, batch, parallel=None, collect_cache=False):
+    """Training/prefill forward.  Returns (logits, cache_or_None, aux)."""
+    x = embed_inputs(cfg, params, batch)
+    B, L, dm = x.shape
+    positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    dh = cfg.resolved_head_dim()
+    cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+
+    remat = getattr(parallel, "remat", "none") if parallel else "none"
+    seq_ax = getattr(parallel, "seq_axis", None) if parallel else None
+
+    def maybe_remat(f):
+        if remat == "full":
+            return jax.checkpoint(f)
+        if remat == "dots":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return f
+
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+    cache = None
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        def body(x, lp):
+            x = constrain(x, ("pod", "data"), seq_ax, None)
+            x, kv = _attn_block(cfg, lp, x, "", cos, sin, cfg.q_chunk,
+                                cfg.kv_chunk)
+            x = _mlp_block(cfg, lp, x, "")
+            return x, kv if collect_cache else None
+        x, kvs = _scan(maybe_remat(body), x, params["layers"], cfg.unroll)
+        if collect_cache:
+            cache = dict(k=kvs[0], v=kvs[1])
+
+    elif cfg.family == "moe":
+        capacity = capacity_for(B * L, cfg.moe)
+        def body(carry, lp):
+            x, auxl = carry
+            x = constrain(x, ("pod", "data"), seq_ax, None)
+            x, kv = _attn_block(cfg, lp, x, "", cos, sin, cfg.q_chunk,
+                                cfg.kv_chunk)
+            x, plan = _moe_block(
+                cfg, lp, x, capacity,
+                getattr(parallel, "moe_token_motion", False)
+                if parallel else False,
+                getattr(parallel, "moe_arbitration_shards", 1)
+                if parallel else 1)
+            lb = load_balance_loss(plan["probs"], plan["ids"], cfg.moe.n_experts)
+            return (x, auxl + lb), kv if collect_cache else None
+        (x, auxl), kvs = _scan(maybe_remat(body), (x, 0.0), params["layers"], cfg.unroll)
+        aux["moe_aux"] = auxl / cfg.n_layers
+        if collect_cache:
+            cache = dict(k=kvs[0], v=kvs[1])
+
+    elif cfg.family == "rwkv":
+        def body(x, lp):
+            x = constrain(x, ("pod", "data"), seq_ax, None)
+            h = rms_norm(x, lp["tm_norm"], cfg.norm_eps)
+            o, (ltm, S) = rwkv6_time_mix(h, lp["tm"], cfg.n_heads,
+                                         cfg.rwkv.chunk)
+            x = x + o
+            h = rms_norm(x, lp["cm_norm"], cfg.norm_eps)
+            o, lcm = rwkv6_channel_mix(h, lp["cm"])
+            x = x + o
+            st = (ltm, lcm, S) if collect_cache else None
+            return x, st
+        x, states = _scan(maybe_remat(body), x, params["layers"], cfg.unroll)
+        if collect_cache:
+            cache = dict(tm_x=states[0], cm_x=states[1], S=states[2])
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid.attn_every
+        groups = cfg.n_layers // k_every
+        mparams = jax.tree.map(
+            lambda a: a.reshape((groups, k_every) + a.shape[1:]),
+            params["layers"])
+
+        def group_body(x, gp):
+            x = constrain(x, ("pod", "data"), seq_ax, None)
+            def inner(x, lp):
+                # NB: the chunk scan stays a lax.scan even in dry-run
+                # unroll mode — intra-chunk work is <3% of layer FLOPs and
+                # unrolling hundreds of chunk bodies explodes compile time
+                o, st = mamba2_forward(x, lp, cfg, cfg.ssm, train=not
+                                       collect_cache)
+                return x + o, st
+            x, sts = _scan(inner, x, gp, cfg.unroll)
+            x, kv = _attn_block(cfg, params["shared"], x, "", cos, sin,
+                                cfg.q_chunk, cfg.kv_chunk)
+            x = _mlp_block(cfg, params["shared"], x, "")
+            return x, (sts, kv) if collect_cache else None
+        x, sts = _scan(maybe_remat(group_body), x, mparams, cfg.unroll)
+        if collect_cache:
+            inner, kv = sts
+            cache = dict(ssm=inner["ssm"], conv_x=inner["conv_x"],
+                         conv_bc=inner["conv_bc"], k=kv[0], v=kv[1])
+    else:
+        raise ValueError(cfg.family)
+
+    logits = lm_head(cfg, params, x)
+    return logits, cache, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, parallel=None):
+    logits, _, aux = forward(cfg, params, batch, parallel)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # vocab-sharding-friendly gold logit: masked reduce instead of gather
+    # (take_along_axis over a sharded vocab dim forces an all-gather)
+    onehot = labels[..., None] == jnp.arange(V, dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = 1e-4 * jnp.mean(lse * lse)
+    total = loss + zloss + 0.01 * aux["moe_aux"]
+    return total, {"loss": loss, "zloss": zloss, "moe_aux": aux["moe_aux"]}

@@ -1,0 +1,132 @@
+"""Mamba2 (SSD) block — chunked state-space scan.
+
+Per head h with scalar decay a_t = exp(-dt_t * exp(A_log)):
+    h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t          (state: [N, P])
+    y_t = C_t . h_t + D * x_t
+Chunked form: intra-chunk contributions via an [Lc, Lc] decay-weighted
+(C.B) matrix (exponent of cumsum differences <= 0, so no overflow), state
+carried across chunks with lax.scan.  MXU-friendly: everything is matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: [B, L, C]; w: [C, K]; b: [C]."""
+    K = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, j:j + x.shape[1], :] * w[:, j] for j in range(K))
+    return out + b
+
+
+def ssd_chunked(xh, dt, A_log, B_, C_, chunk, unroll=False):
+    """xh: [B, L, H, P]; dt: [B, L, H]; A_log: [H]; B_/C_: [B, L, N].
+
+    Returns y: [B, L, H, P] and final state [B, H, N, P].
+    unroll=True uses a python loop over chunks (loop-free HLO for dry-run)."""
+    Bsz, L, H, P = xh.shape
+    N = B_.shape[-1]
+    nc = L // chunk
+    assert L % chunk == 0
+
+    xh = xh.reshape(Bsz, nc, chunk, H, P)
+    dt = dt.reshape(Bsz, nc, chunk, H)
+    Bm = B_.reshape(Bsz, nc, chunk, N)
+    Cm = C_.reshape(Bsz, nc, chunk, N)
+
+    loga = -dt * jnp.exp(A_log.astype(jnp.float32))            # [B,nc,Lc,H] <= 0
+    cum = jnp.cumsum(loga, axis=2)                             # within-chunk cumsum
+
+    def step(state, inp):
+        # state: [B, H, N, P]
+        xc, dtc, bc, cc, la, lc = inp
+        # lc: within-chunk cumulative log decay [B, Lc, H]
+        # inter-chunk: y_t += exp(lc_t) * (C_t . S_prev)
+        decay_in = jnp.exp(lc)                                 # [B,Lc,H]
+        y_inter = jnp.einsum("bln,bhnp->blhp", cc, state) * decay_in[..., None]
+        # intra-chunk: M_ti = (C_t.B_i) * exp(lc_t - lc_i) * dt_i, i <= t
+        cb = jnp.einsum("btn,bin->bti", cc, bc)                # [B,Lc,Lc]
+        dd = lc[:, :, None, :] - lc[:, None, :, :]             # [B,t,i,H] (<=0 on tri)
+        tri = jnp.tril(jnp.ones((lc.shape[1], lc.shape[1]), bool))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(dd), 0.0)
+        m = m * cb[..., None] * dtc[:, None, :, :]             # [B,t,i,H]
+        y_intra = jnp.einsum("btih,bihp->bthp", m, xc)
+        # state update: S' = exp(lc_L) S + sum_i exp(lc_L - lc_i) dt_i B_i (x) x_i
+        tail = jnp.exp(lc[:, -1:, :] - lc)                     # [B,Lc,H]
+        contrib = jnp.einsum("bin,bih,bihp->bhnp", bc, tail * dtc, xc)
+        state_new = state * jnp.exp(lc[:, -1])[:, :, None, None] + contrib
+        y = (y_inter + y_intra).astype(xh.dtype)
+        return state_new, y
+
+    s0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    inps = (xh.transpose(1, 0, 2, 3, 4), dt.transpose(1, 0, 2, 3),
+            Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3),
+            loga.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3))
+    if unroll:
+        state, ys = s0, []
+        for c in range(nc):
+            state, y = step(state, jax.tree.map(lambda a: a[c], inps))
+            ys.append(y)
+        ys = jnp.stack(ys)
+    else:
+        state, ys = lax.scan(step, s0, inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, L, H, P)
+    return y, state
+
+
+def mamba2_forward(x, p, cfg, ssm, train=True, state=None, unroll=False):
+    """One Mamba2 block.  x: [B, L, D].  Returns (out, new_state).
+
+    state (decode): dict(ssm=[B,H,N,P], conv_x=[B,K-1,di], conv_bc=[B,K-1,2N]).
+    """
+    B, L, D = x.shape
+    di = ssm.expand * D
+    H = di // ssm.headdim
+    P, N = ssm.headdim, ssm.d_state
+
+    h = rms_norm(x, p["norm"])                                 # input layernorm
+    z = jnp.einsum("bld,de->ble", h, p["wz"])
+    xi = jnp.einsum("bld,de->ble", h, p["wx"])
+    bc = jnp.einsum("bld,de->ble", h, p["wbc"])                # [B,L,2N]
+    dt = jnp.einsum("bld,dh->blh", h, p["wdt"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+
+    if state is None:
+        xi_pre, bc_pre = xi, bc            # conv state must be PRE-conv
+        xi = jax.nn.silu(causal_conv1d(xi, p["conv_x_w"], p["conv_x_b"]))
+        bc = jax.nn.silu(causal_conv1d(bc, p["conv_bc_w"], p["conv_bc_b"]))
+        B_, C_ = jnp.split(bc, 2, axis=-1)
+        xh = xi.reshape(B, L, H, P)
+        y, new_ssm = ssd_chunked(xh, dt, p["A_log"], B_, C_, ssm.chunk,
+                                 unroll=unroll)
+        y = y.reshape(B, L, di) + xi * jnp.repeat(p["D"], P)[None, None, :]
+        new_state = None if train else dict(
+            ssm=new_ssm,
+            conv_x=xi_pre[:, L - (ssm.d_conv - 1):, :],
+            conv_bc=bc_pre[:, L - (ssm.d_conv - 1):, :])
+    else:
+        # single-token decode: roll conv state, one recurrence step
+        cx = jnp.concatenate([state["conv_x"], xi], axis=1)    # [B,K,di]
+        cb = jnp.concatenate([state["conv_bc"], bc], axis=1)
+        xi1 = jax.nn.silu(jnp.einsum("bkc,ck->bc", cx, p["conv_x_w"])
+                          + p["conv_x_b"])
+        bc1 = jax.nn.silu(jnp.einsum("bkc,ck->bc", cb, p["conv_bc_w"])
+                          + p["conv_bc_b"])
+        B_, C_ = jnp.split(bc1, 2, axis=-1)                    # [B,N]
+        xh = xi1.reshape(B, H, P)
+        a = jnp.exp(-dt[:, 0] * jnp.exp(p["A_log"].astype(jnp.float32)))  # [B,H]
+        s = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", B_, dt[:, 0], xh)
+        y = jnp.einsum("bn,bhnp->bhp", C_, s).astype(x.dtype)
+        y = y.reshape(B, 1, di) + xi1[:, None, :] * jnp.repeat(p["D"], P)[None, None, :]
+        new_state = dict(ssm=s, conv_x=cx[:, 1:], conv_bc=cb[:, 1:])
+
+    y = rms_norm(y, p["norm_inner"]) * jax.nn.silu(
+        z[:, -y.shape[1]:, :]).astype(y.dtype)
+    out = jnp.einsum("ble,ed->bld", y.astype(x.dtype), p["wo"])
+    return out, new_state

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts layer with P4DB-style capacity arbitration.
+
+Token->expert admission is the paper's hot-tuple pattern: every token is a
+"transaction" incrementing a contended per-expert counter; admission is a
+constrained write (admit iff counter < capacity).  P4DB executes this
+abort-free in pipeline (serial) order; here the serial-equivalent prefix
+counts are computed with a sort + segmented-prefix scheme (and, on TPU, the
+``kernels/moe_route`` Pallas kernel implements the same segmented counter
+with a sequential-grid VMEM carry — the switch pipeline analogue).
+
+Dispatch is sort-based (no dense one-hot [T, E] tensors), so it scales to
+the 1M-token dry-run shapes; the expert buffer [E, C, d] shards E over the
+EP axis and C over the data axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.types import MoEConfig
+
+
+def capacity_for(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(cfg.top_k * n_tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def arbitrate_positions(sorted_ids):
+    """Serial-order position of each entry within its (sorted) expert group.
+
+    Equivalent to replaying the P4DB switch: transactions arrive in sorted
+    packet order, each reads-and-increments its expert's register.  The
+    returned value is the pre-increment counter read.
+    """
+    n = sorted_ids.shape[0]
+    first = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    return jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+
+
+def route(x, router_w, moe: MoEConfig, capacity: int):
+    """Compute routing plan.  x: [T, d] -> plan dict (all [T*k] or scalars)."""
+    T = x.shape[0]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = lax.top_k(probs, moe.top_k)                    # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = ids.reshape(-1).astype(jnp.int32)               # [T*k]
+    # stable sort by expert keeps arrival (packet) order within an expert
+    order = jnp.argsort(flat_ids, stable=True).astype(jnp.int32)
+    sorted_ids = flat_ids[order]
+    pos = arbitrate_positions(sorted_ids)                      # switch counters
+    admit = pos < capacity                                     # constrained write
+    slot = jnp.where(admit, sorted_ids * capacity + pos, moe.n_experts * capacity)
+    tok = order // moe.top_k                                   # source token row
+    return dict(order=order, slot=slot, admit=admit, tok=tok, ids=ids,
+                gate=gate.reshape(-1)[order], probs=probs)
+
+
+def moe_ffn_sharded(x, params, moe: MoEConfig, act_fn, capacity: int,
+                    n_shards: int):
+    """Hierarchical (per-shard) capacity arbitration.
+
+    Each data shard arbitrates its local tokens into its own capacity
+    slice — the multi-pipeline switch picture: per-pipeline register
+    arrays, no cross-pipeline coordination.  The dispatch scatter then
+    stays device-local (the global-arbitration scatter forces XLA to
+    all-reduce a replicated [E, C, d] buffer — terabytes per step on the
+    MoE giants); only the [E, S*C_l, d] activation buffer is resharded at
+    the EP boundary.  Capacity is ~C/S per shard: drops become per-shard
+    (slightly different semantics than global arbitration, recorded in
+    DESIGN.md — and better balanced under data-parallel sampling)."""
+    from repro.models.lm import constrain
+    T, d = x.shape
+    E = moe.n_experts
+    S = n_shards
+    Ts = T // S
+    cap_l = max(8, (-(-capacity // S) // 8) * 8 + 8)
+
+    xs = x.reshape(S, Ts, d)
+
+    def one_shard(xi):
+        plan = route(xi, params["router"], moe, cap_l)
+        xb = jnp.zeros((E * cap_l, d), xi.dtype)
+        xb = xb.at[plan["slot"]].set(xi[plan["tok"]], mode="drop",
+                                     unique_indices=True)
+        return xb.reshape(E, cap_l, d), plan
+
+    xb, plans = jax.vmap(one_shard)(xs)              # [S, E, C_l, d]
+    xb = constrain(xb, ("pod", "data"), None, None, None)
+    xb2 = xb.transpose(1, 0, 2, 3).reshape(E, S * cap_l, d)
+    # E over EP, capacity over data: expert flops split over the data axis
+    # as a *batch* dim — no partial-sum all-reduce, weights gathered once
+    xb2 = constrain(xb2, "model", ("pod", "data"), None)
+
+    g = act_fn(jnp.einsum("ecd,edf->ecf", xb2, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xb2, params["w_up"])
+    yb = jnp.einsum("ecf,efd->ecd", (g * u.astype(g.dtype)).astype(x.dtype),
+                    params["w_down"])
+    yb = constrain(yb, "model", ("pod", "data"), None)
+    yb = yb.reshape(E, S, cap_l, d).transpose(1, 0, 2, 3)
+    yb = constrain(yb, ("pod", "data"), None, None, None)
+
+    def combine(ybi, plan):
+        flat = ybi.reshape(E * cap_l, d)
+        w = jnp.where(plan["admit"], plan["gate"], 0.0)
+        safe = jnp.minimum(plan["slot"], E * cap_l - 1)
+        contrib = flat[safe] * w[:, None].astype(flat.dtype)
+        return jnp.zeros((Ts, d), jnp.float32).at[plan["tok"]].add(
+            contrib.astype(jnp.float32))
+
+    ys = jax.vmap(combine)(yb, plans)                # [S, Ts, d]
+    y = ys.reshape(T, d).astype(x.dtype)
+    flat_plans = dict(plans)
+    flat_plans = {k: (a.reshape((-1,) + a.shape[2:]) if a.ndim > 1
+                      else a) for k, a in plans.items()}
+    return y, flat_plans
+
+
+def moe_ffn(x, params, moe: MoEConfig, act_fn, capacity: int,
+            token_motion: bool = False):
+    """x: [T, d] -> [T, d].  params: router/[d,E], w_gate/up [E,d,f], w_down [E,f,d].
+
+    token_motion=True constrains the dispatch buffers to the expert-parallel
+    layout (E over the EP axis, capacity over data) so SPMD moves token
+    activations between devices (all-to-all-class traffic) instead of
+    all-gathering expert weights — the decisive layout for giant MoEs."""
+    from repro.models.lm import constrain
+    T, d = x.shape
+    plan = route(x, params["router"], moe, capacity)
+    E, C = moe.n_experts, capacity
+
+    # dispatch: scatter admitted rows into the expert buffer; non-admitted
+    # entries carry slot == E*C which is out-of-bounds and dropped.
+    xb = jnp.zeros((E * C, d), x.dtype)
+    xb = xb.at[plan["slot"]].set(x[plan["tok"]], mode="drop",
+                                 unique_indices=True)
+    xb = xb.reshape(E, C, d)
+    if token_motion:
+        xb = constrain(xb, "model", ("pod", "data"), None)
+
+    g = act_fn(jnp.einsum("ecd,edf->ecf", xb, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xb, params["w_up"])
+    yb = jnp.einsum("ecf,efd->ecd", (g * u.astype(g.dtype)).astype(x.dtype),
+                    params["w_down"])
+    if token_motion:
+        yb = constrain(yb, "model", ("pod", "data"), None)
+    yb = yb.reshape(E * C, d)
+
+    # combine: gather each admitted row back, weight, scatter-add per token.
+    # Out-of-bounds gathers clamp, so mask dropped entries explicitly.
+    w = jnp.where(plan["admit"], plan["gate"], 0.0)
+    safe_slot = jnp.minimum(plan["slot"], E * C - 1)
+    contrib = yb[safe_slot] * w[:, None].astype(yb.dtype)
+    y = jnp.zeros((T, d), jnp.float32).at[plan["tok"]].add(
+        contrib.astype(jnp.float32))
+    return y.astype(x.dtype), plan
+
+
+def load_balance_loss(probs, ids, n_experts):
+    """Switch-transformer auxiliary loss (mean prob * mean assignment)."""
+    T = probs.shape[0]
+    assign = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac_tokens = assign / jnp.maximum(assign.sum(), 1.0)
+    frac_probs = probs.mean(axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,105 @@
+"""Parameter definition registry.
+
+Every model declares its parameters once as ``ParamDef``s (shape + logical
+axes + init style).  Real init, abstract ShapeDtypeStructs (dry-run) and
+PartitionSpecs (pjit) are all derived from the same defs, so they can never
+drift apart.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis names used across models.  parallel/sharding.py maps these to
+# mesh axes depending on the (arch, shape) parallel plan.
+#   layers   : scan dimension (never sharded)
+#   embed    : d_model
+#   heads    : fused attention head dim (n_heads * head_dim)
+#   kv_heads : fused kv head dim
+#   ff       : mlp hidden
+#   vocab    : vocabulary
+#   experts  : MoE expert dimension
+#   ssm_inner: mamba inner channels / rwkv fused head dim
+#   none     : replicated
+
+PyTree = dict
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | small_normal
+    scale: float = 0.02
+    dtype: Optional[str] = None  # override model dtype (e.g. norms in fp32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(key, d: ParamDef, dtype) -> jax.Array:
+    dt = jnp.dtype(d.dtype) if d.dtype else dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dt)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        s = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, d.shape, jnp.float32) * s).astype(dt)
+    raise ValueError(d.init)
+
+
+def init_params(defs: Dict[str, ParamDef], key, dtype) -> PyTree:
+    """Materialize real parameters (smoke tests / examples)."""
+    names = sorted(defs)
+    keys = jax.random.split(key, len(names))
+    flat = {n: _init_one(k, defs[n], dtype) for n, k in zip(names, keys)}
+    return unflatten(flat)
+
+
+def abstract_params(defs: Dict[str, ParamDef], dtype) -> PyTree:
+    """ShapeDtypeStruct stand-ins — no allocation (dry-run path)."""
+    flat = {
+        n: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype) if d.dtype else dtype)
+        for n, d in defs.items()
+    }
+    return unflatten(flat)
+
+
+def param_logical_axes(defs: Dict[str, ParamDef]) -> PyTree:
+    return unflatten({n: d.axes for n, d in defs.items()})
+
+
+def unflatten(flat: Dict[str, object]) -> PyTree:
+    """'a/b/c' keyed dict -> nested dicts."""
+    tree: PyTree = {}
+    for name, v in flat.items():
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def flatten(tree: PyTree, prefix="") -> Dict[str, object]:
+    out = {}
+    for k, v in tree.items():
+        name = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten(v, name))
+        else:
+            out[name] = v
+    return out
+
+
+def count_params(defs: Dict[str, ParamDef]) -> int:
+    return sum(int(np.prod(d.shape)) for d in defs.values())

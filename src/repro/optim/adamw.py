@@ -1,0 +1,140 @@
+"""AdamW with configurable moment storage.
+
+moment_dtype:
+  float32  — standard
+  bfloat16 — half-size moments
+  int8     — block-quantized moments (per last-dim row scale, fp32 scales),
+             the distributed-optimization memory trick used for the
+             1T-param dry-runs.  Quantization is symmetric linear.
+
+Moments are stored as two parallel pytrees (payload + scale) with the same
+structure as params, so pjit shards them with the parameter shardings.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import TrainConfig
+
+
+def _q(x):
+    """Quantize fp32 -> (int8, scale) along the last dim."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object                # payload pytree (like params)
+    m_scale: object          # fp32 scales (size-1 dummies unless int8)
+    v: object
+    v_scale: object
+
+
+def _scale_shape(shape):
+    return (shape[:-1] + (1,)) if len(shape) else (1,)
+
+
+def _payload_dtype(moment_dtype):
+    return {"int8": jnp.int8, "bfloat16": jnp.bfloat16,
+            "float32": jnp.float32}[moment_dtype]
+
+
+def init_state(params, moment_dtype="float32") -> AdamWState:
+    pd = _payload_dtype(moment_dtype)
+    payload = lambda p: jnp.zeros(p.shape, pd)
+    scale = lambda p: jnp.zeros(_scale_shape(p.shape) if moment_dtype == "int8"
+                                else (1,), jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(payload, params),
+                      jax.tree.map(scale, params),
+                      jax.tree.map(payload, params),
+                      jax.tree.map(scale, params))
+
+
+def abstract_state(params, moment_dtype="float32") -> AdamWState:
+    pd = _payload_dtype(moment_dtype)
+    payload = lambda p: jax.ShapeDtypeStruct(p.shape, pd)
+    scale = lambda p: jax.ShapeDtypeStruct(
+        _scale_shape(p.shape) if moment_dtype == "int8" else (1,),
+        jnp.float32)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      jax.tree.map(payload, params),
+                      jax.tree.map(scale, params),
+                      jax.tree.map(payload, params),
+                      jax.tree.map(scale, params))
+
+
+def state_shardings(param_sh, mesh, moment_dtype="float32"):
+    """Shard moments like their params; scales replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    if moment_dtype == "int8":
+        # scale dims follow param dims except the (collapsed) last one
+        def scale_sh(s):
+            spec = list(s.spec) + [None] * 10
+            spec = spec[:max(len(s.spec), 1)]
+            if spec:
+                spec[-1] = None
+            return NamedSharding(mesh, P(*spec))
+        scales = jax.tree.map(scale_sh, param_sh)
+    else:
+        scales = jax.tree.map(lambda s: rep, param_sh)
+    return AdamWState(rep, param_sh, scales, param_sh, scales)
+
+
+def lr_at(tc: TrainConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(tc.warmup_steps, 1), 1.0)
+    return tc.lr * warm
+
+
+def apply_updates(params, grads, state: AdamWState, tc: TrainConfig,
+                  moment_dtype="float32"):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = lr_at(tc, step)
+    b1, b2 = tc.beta1, tc.beta2
+    int8 = moment_dtype == "int8"
+
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def read(val, sc):
+        return val.astype(jnp.float32) * sc if int8 else val.astype(jnp.float32)
+
+    def upd(p, g, m, ms, v, vs):
+        g = g.astype(jnp.float32) * clip
+        m_f = b1 * read(m, ms) + (1 - b1) * g
+        v_f = b2 * read(v, vs) + (1 - b2) * g * g
+        mhat = m_f / (1 - b1 ** t)
+        vhat = v_f / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps)
+        wd = 0.0 if p.ndim <= 1 else tc.weight_decay
+        new_p = p.astype(jnp.float32) * (1 - lr * wd) - lr * delta
+        if int8:
+            mq, msq = _q(m_f)
+            vq, vsq = _q(v_f)
+        else:
+            pd = _payload_dtype(moment_dtype)
+            mq, msq = m_f.astype(pd), ms
+            vq, vsq = v_f.astype(pd), vs
+        return new_p.astype(p.dtype), mq, msq, vq, vsq
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_ms = tdef.flatten_up_to(state.m_scale)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_vs = tdef.flatten_up_to(state.v_scale)
+    outs = [upd(*args) for args in
+            zip(flat_p, flat_g, flat_m, flat_ms, flat_v, flat_vs)]
+    unflat = lambda i: jax.tree.unflatten(tdef, [o[i] for o in outs])
+    new_state = AdamWState(step, unflat(1), unflat(2), unflat(3), unflat(4))
+    return unflat(0), new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,74 @@
+"""Gradient compression with error feedback (pod-axis distributed-
+optimization trick).
+
+Cross-pod (DCN-class) links are the scarce resource on a multi-pod mesh;
+int8 + per-row scales cuts gradient bytes 4x vs fp32 (2x vs bf16).  Error
+feedback carries the quantization residual into the next step so the bias
+is bounded (Karimireddy et al. style, adapted to pjit: quantize ->
+all-gather over the pod axis inside shard_map -> dequantize-and-mean).
+
+The P4DB tie-in: hot-row gradient pre-aggregation.  Embedding-gradient
+scatter-adds concentrate on a Zipfian-hot set of vocab rows; aggregating
+duplicate rows *before* the collective (a segmented-scan, the same
+primitive as the switch engine) shrinks the payload — offload-the-hot-
+tuples applied to the gradient path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(x, axis_name: str):
+    """Mean over a mesh axis with int8 wire format (use inside shard_map).
+
+    Wire bytes per device: n*size*1B (+ scales) vs 4*size of an fp32 psum
+    ring (2x traffic) — a ~6-8x reduction on the pod axis."""
+    q, s = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)            # int8 on the wire
+    ss = jax.lax.all_gather(s, axis_name)
+    n = qs.shape[0]
+    return sum(dequantize_int8(qs[i], ss[i]) for i in range(n)) / n
+
+
+def ef_compress_step(grad, residual):
+    """Error feedback: returns (quantized-dequantized grad, new residual)."""
+    g = grad + residual
+    q, s = quantize_int8(g)
+    gq = dequantize_int8(q, s)
+    return gq, g - gq
+
+
+def hot_row_preaggregate(row_ids, row_grads):
+    """Aggregate duplicate embedding-row gradients before the collective.
+
+    row_ids: [N] int32 (token ids), row_grads: [N, D].  Returns
+    (unique_ids [N], agg [N, D], count) with duplicates summed into the
+    first occurrence — a segmented sum over the sorted stream, i.e. the
+    switch engine's ADD path applied to gradient traffic."""
+    order = jnp.argsort(row_ids, stable=True)
+    ids_s = row_ids[order]
+    g_s = row_grads[order]
+    # segment boundaries
+    first = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+    seg = jnp.cumsum(first) - 1                      # segment index per row
+    n = row_ids.shape[0]
+    agg = jnp.zeros_like(g_s).at[seg].add(g_s)
+    uniq = jnp.where(first, ids_s, -1)
+    uniq_ids = jnp.zeros((n,), row_ids.dtype).at[seg].max(ids_s * 0 + ids_s)
+    count = jnp.sum(first.astype(jnp.int32))
+    return uniq_ids, agg, count

@@ -1,0 +1,195 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Parameters/caches/batches carry *logical* axis names (see models/params.py);
+this module resolves them to PartitionSpecs for a concrete mesh, with
+divisibility guards (an axis that does not divide evenly falls back to
+replication — e.g. yi-34b's 56 q-heads on a 16-way model axis).
+
+Baseline plan (recorded in EXPERIMENTS.md; hillclimbed in §Perf):
+  batch           -> (pod, data)        [DP]
+  embed           -> (pod, data)        [ZeRO-3 / FSDP weight sharding]
+  ff/heads/kv/experts/ssm_inner -> model [TP / EP]
+  vocab           -> model (if divisible)
+  decode kv_seq   -> model              [sequence-sharded KV]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.types import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import params as Pm
+from repro.models import decode as Dm
+
+
+# logical axis -> candidate mesh axes (joined; filtered by mesh + divisibility)
+PARAM_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("pod", "data"),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "vocab": ("model",),
+    "heads_state": ("model",),
+    "batch": ("pod", "data"),
+    "kv_seq": ("model",),
+    "kv_heads_cache": (),
+    "layers": (),
+    "layers2": (),
+}
+
+# logical head-count guards: fused dims may divide evenly while splitting a
+# head across devices; these axes are only sharded if the *count* divides.
+HEADCOUNT_AXES = {"heads": "n_heads", "kv_heads": "n_kv_heads",
+                  "heads_state": None}
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_dim(dim: int, logical: Optional[str], mesh_sizes: Dict[str, int],
+                count: Optional[int] = None):
+    """Mesh axes for one array dim (or None).  count = head-count guard."""
+    if logical is None or logical not in PARAM_RULES:
+        return None
+    axes = [a for a in PARAM_RULES[logical] if a in mesh_sizes]
+    if not axes:
+        return None
+    total = int(np.prod([mesh_sizes[a] for a in axes]))
+    if dim % total != 0:
+        # retry with the last axis only (e.g. data without pod)
+        axes = axes[-1:]
+        total = mesh_sizes[axes[0]]
+        if dim % total != 0:
+            return None
+    if count is not None and count % total != 0:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, cfg: Optional[ModelConfig] = None) -> P:
+    ms = _mesh_sizes(mesh)
+    parts = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        count = None
+        if cfg is not None and ax in HEADCOUNT_AXES and HEADCOUNT_AXES[ax]:
+            count = getattr(cfg, HEADCOUNT_AXES[ax])
+        r = resolve_dim(dim, ax, ms, count)
+        # a mesh axis may appear at most once per spec (e.g. MoE experts
+        # take 'model' for EP; the expert ff dim then stays replicated)
+        rt = r if isinstance(r, tuple) else (r,) if r else ()
+        if any(a in used for a in rt):
+            r = None
+        else:
+            used.update(rt)
+        parts.append(r)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    defs = lm_defs(cfg)
+    flat = {n: NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, cfg))
+            for n, d in defs.items()}
+    return Pm.unflatten(flat)
+
+
+def lm_defs(cfg):
+    from repro.models.lm import build_defs
+    return build_defs(cfg)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Shardings for the input batch pytree (see launch/specs.py shapes)."""
+    ms = _mesh_sizes(mesh)
+    b_axes = resolve_dim(shape.global_batch, "batch", ms)
+    bspec = P(b_axes)
+
+    def named(spec):
+        return NamedSharding(mesh, spec)
+
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        if cfg.frontend == "audio_stub":
+            out["frames"] = named(P(b_axes, None, None))
+        elif cfg.frontend == "vision_stub":
+            out["patches"] = named(P(b_axes, None, None))
+            out["tokens"] = named(P(b_axes, None))
+        else:
+            out["tokens"] = named(P(b_axes, None))
+        if shape.kind == "train":
+            out["labels"] = named(P(b_axes, None))
+        return out
+    # decode
+    out = {"pos": named(P(b_axes))}
+    if cfg.frontend == "audio_stub":
+        out["frames"] = named(P(b_axes, None))
+    else:
+        out["tokens"] = named(P(b_axes))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh):
+    spec = Dm._normalize(Dm.cache_spec(cfg, batch, max_len))
+    return {n: NamedSharding(mesh, spec_for(s, a, mesh, cfg))
+            for n, (s, dt, a) in spec.items()}
+
+
+# --------------------------------------------------- microbatch heuristic --
+
+FAMILY_ACT_FACTOR = {"dense": 1.0, "vlm": 1.0, "audio": 1.0, "moe": 1.6,
+                     "hybrid": 2.5, "rwkv": 2.2}
+
+
+def auto_microbatch(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    budget_bytes: float = 6e9) -> int:
+    """Smallest power-of-two microbatch count s.t. saved layer-boundary
+    activations fit the per-device budget (remat='full' keeps one [B,L,D]
+    residual per layer for backward)."""
+    if shape.kind != "train":
+        return 1
+    ms = _mesh_sizes(mesh)
+    dp = int(np.prod([v for k, v in ms.items() if k in ("pod", "data")]))
+    b_local = max(shape.global_batch // dp, 1)
+    factor = FAMILY_ACT_FACTOR.get(cfg.family, 1.5)
+    per_layer = b_local * shape.seq_len * cfg.d_model * 2 * factor
+    total = per_layer * cfg.n_layers
+    mb = 1
+    while total / mb > budget_bytes and mb < b_local:
+        mb *= 2
+    return mb
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Everything launch/train/dryrun needs for one (arch, shape, mesh)."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig
+    microbatch: int
+
+    def describe(self):
+        return (f"{self.cfg.name} x {self.shape.name}: microbatch="
+                f"{self.microbatch} remat={self.parallel.remat} "
+                f"moments={self.parallel.moment_dtype}")
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              parallel: Optional[ParallelConfig] = None) -> Plan:
+    parallel = parallel or ParallelConfig()
+    mb = auto_microbatch(cfg, shape, mesh)
+    if parallel.microbatch > 1:
+        mb = parallel.microbatch
+    # big-model default: quantized moments so optimizer state stays feasible
+    moment = parallel.moment_dtype
+    if cfg.family == "moe" and moment == "float32":
+        moment = "int8"
+    parallel = dataclasses.replace(parallel, microbatch=mb, moment_dtype=moment)
+    return Plan(cfg, shape, parallel, mb)

@@ -1,0 +1,127 @@
+"""Minimal discrete-event simulation core: generator coroutines + an event
+heap.  Coroutines yield commands:
+
+  ("delay", seconds)
+  ("lock", SimLock, mode, ts)    -> resumes with True (granted) / False
+                                    (denied; NO_WAIT or WAIT_DIE died)
+  ("acquire", Resource)          -> resumes when a slot is free
+  ("release", Resource)
+
+Lock ownership is keyed by transaction timestamp (ts), so the model layer
+can release locks synchronously without generator identity."""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+
+class SimLock:
+    """2PL lock with NO_WAIT or WAIT_DIE semantics, owners keyed by ts."""
+
+    __slots__ = ("owners", "waiters", "policy")
+
+    def __init__(self, policy: str = "NO_WAIT"):
+        self.owners: Dict[int, str] = {}            # ts -> mode
+        self.waiters: List[Tuple[object, str, int]] = []
+        self.policy = policy
+
+    def _mode(self) -> Optional[str]:
+        if not self.owners:
+            return None
+        return "X" if "X" in self.owners.values() else "S"
+
+    def try_acquire(self, ts: int, mode: str) -> Optional[bool]:
+        """True granted, False denied, None -> wait."""
+        if ts in self.owners:
+            if mode == "X" and self.owners[ts] == "S" and len(self.owners) > 1:
+                return False                         # upgrade conflict
+            self.owners[ts] = "X" if "X" in (mode, self.owners[ts]) else "S"
+            return True
+        cur = self._mode()
+        if cur is None or (cur == "S" and mode == "S"):
+            self.owners[ts] = mode
+            return True
+        if self.policy == "NO_WAIT":
+            return False
+        return None if ts < min(self.owners) else False   # WAIT_DIE
+
+    def release(self, ts: int, sim: "Sim"):
+        self.owners.pop(ts, None)
+        while self.waiters and not self.owners:
+            gen, mode, wts = self.waiters[0]
+            r = self.try_acquire(wts, mode)
+            if r:
+                self.waiters.pop(0)
+                sim._resume(gen, True)
+                if mode == "X":
+                    break
+            else:
+                break
+
+
+class Resource:
+    """FIFO counted resource (e.g. switch pipeline locks)."""
+
+    __slots__ = ("capacity", "used", "queue")
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.used = 0
+        self.queue: List[object] = []
+
+
+class Sim:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, object, object]] = []
+        self._seq = 0
+
+    def spawn(self, gen, delay=0.0):
+        self._push(delay, gen, None)
+
+    def _push(self, delay, gen, value):
+        heapq.heappush(self._heap, (self.now + delay, self._seq, gen, value))
+        self._seq += 1
+
+    def _resume(self, gen, value):
+        self._push(0.0, gen, value)
+
+    def run(self, until: float):
+        while self._heap and self._heap[0][0] <= until:
+            t, _, gen, value = heapq.heappop(self._heap)
+            self.now = t
+            self._step(gen, value)
+        self.now = until
+
+    def _step(self, gen, value):
+        try:
+            cmd = gen.send(value)
+        except StopIteration:
+            return
+        kind = cmd[0]
+        if kind == "delay":
+            self._push(cmd[1], gen, None)
+        elif kind == "lock":
+            _, lock, mode, ts = cmd
+            r = lock.try_acquire(ts, mode)
+            if r is None:
+                lock.waiters.append((gen, mode, ts))
+            else:
+                self._resume(gen, r)
+        elif kind == "acquire":
+            res = cmd[1]
+            if res.used < res.capacity:
+                res.used += 1
+                self._resume(gen, True)
+            else:
+                res.queue.append(gen)
+        elif kind == "release":
+            res = cmd[1]
+            if res.queue:
+                g = res.queue.pop(0)
+                self._resume(g, True)
+            else:
+                res.used -= 1
+            self._resume(gen, None)
+        else:
+            raise ValueError(cmd)

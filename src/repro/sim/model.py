@@ -1,0 +1,274 @@
+"""Cluster timing model (paper §7 setup): 8 nodes, 10G NICs, DPDK, one
+programmable ToR switch.  Workers run closed-loop; the DES supplies lock
+contention, switch pipeline-lock queueing and abort/retry dynamics.
+
+Key latency asymmetry (the paper's core argument): the switch is reachable
+in HALF the node-to-node latency, and in-switch txns take no locks at all.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.layout import trace_reorderable
+from repro.sim.des import Resource, Sim, SimLock
+
+
+@dataclass
+class Timing:
+    t_local_op: float = 1.0e-6        # index + latch + log per op
+    rtt_node: float = 8e-6            # node -> node round trip (2 hops each way)
+    rtt_switch: float = 4e-6          # node -> switch round trip (1 hop each way)
+    t_pipe: float = 0.1e-6            # pipeline transit
+    t_recirc: float = 0.6e-6          # per extra pass (recirculation port)
+    t_recirc_fast: float = 0.25e-6    # fast-recirculate port (lock owners)
+    t_backoff: float = 10e-6          # abort backoff base (grows per retry)
+    t_2pc_round: float = 8e-6         # one 2PC message round
+    t_client: float = 4e-6            # node-side per-txn CPU (DPDK + logic)
+    t_commit_local: float = 2e-6      # commit/log-flush while locks held
+
+
+@dataclass
+class SystemConfig:
+    kind: str = "p4db"                # p4db | noswitch | lmswitch
+    protocol: str = "NO_WAIT"         # cold-path 2PL flavor
+    pipeline_locks: int = 2           # fine-grained 2-bit locks (1 = naive)
+    fast_recirc: bool = True
+    early_release: bool = False       # Chiller-style early lock release
+    drop_on_abort: bool = True        # aborted txns are replaced, not
+                                      # retried forever (paper Fig 12 counts
+                                      # committed txns; hot txns under
+                                      # No-Switch mostly abort)
+
+
+@dataclass
+class TxnProfile:
+    kind: str
+    klass: str                        # hot | cold | warm
+    hot_ops: List[tuple]              # (key, node, mode)
+    cold_ops: List[tuple]             # (key, node, mode)
+    home: int
+    participants: frozenset
+    passes: int = 1
+
+
+def profile_txn(txn, hot_index, home_node) -> TxnProfile:
+    from repro.core.packets import READ
+    trace = [(k, o) for o, k, _ in txn.ops]
+    if hot_index is None:
+        klass = "cold"
+    else:
+        klass = hot_index.classify(trace)
+    hot_ops, cold_ops = [], []
+    parts = set()
+    for o, k, v in txn.ops:
+        node = k // 1_000_000_000
+        mode = "S" if o == READ else "X"
+        if hot_index is not None and hot_index.is_hot(k):
+            hot_ops.append((k, node, mode))
+        else:
+            cold_ops.append((k, node, mode))
+            parts.add(node)
+    passes = 1
+    if hot_ops:
+        hot_trace = [(k, o) for k, o in trace if hot_index.is_hot(k)]
+        seq = [hot_index.slot(k)[0] for k, _ in hot_trace]
+        if trace_reorderable(hot_trace):
+            seq = sorted(seq)
+        last = -1
+        for s in seq:
+            if s <= last:
+                passes += 1
+            last = s
+    return TxnProfile(txn.kind, klass, hot_ops, cold_ops, home_node,
+                      frozenset(parts), passes)
+
+
+class ClusterSim:
+    def __init__(self, profiles: List[TxnProfile], n_nodes: int,
+                 workers_per_node: int, system: SystemConfig,
+                 timing: Timing = Timing(), seed: int = 0,
+                 sim_time: float = 0.05, warmup: float = 0.01):
+        self.profiles = profiles
+        self.n_nodes = n_nodes
+        self.wpn = workers_per_node
+        self.sys = system
+        self.T = timing
+        self.rng = np.random.default_rng(seed)
+        self.sim_time = sim_time
+        self.warmup = warmup
+        self.locks: Dict[int, SimLock] = {}
+        self.pipe = Resource(system.pipeline_locks)
+        self.commits = collections.Counter()
+        self.aborts = collections.Counter()
+        self.lat_sum = collections.Counter()
+        self.lat_n = collections.Counter()
+        self.breakdown = collections.Counter()   # phase -> summed seconds
+        self._ts = 0
+
+    def _charge(self, phase, dt):
+        if getattr(self, "sim", None) is not None and \
+                self.sim.now >= self.warmup:
+            self.breakdown[phase] += dt
+
+    # ------------------------------------------------------------ locks --
+    def lock_of(self, key) -> SimLock:
+        lk = self.locks.get(key)
+        if lk is None:
+            lk = self.locks[key] = SimLock(self.sys.protocol)
+        return lk
+
+    # ----------------------------------------------------------- worker --
+    def worker(self, node: int):
+        sim, T = self.sim, self.T
+        n_prof = len(self.profiles)
+        while True:
+            prof = self.profiles[int(self.rng.integers(n_prof))]
+            t0 = sim.now
+            self._ts += 1
+            ts = self._ts
+            yield ("delay", T.t_client)
+            committed = yield from self.run_txn(prof, ts)
+            attempt = 1
+            while not committed:
+                self.aborts[prof.klass] += 1
+                yield ("delay", float(self.rng.exponential(
+                    min(T.t_backoff * attempt, 100e-6))))
+                if self.sys.drop_on_abort:
+                    break
+                attempt += 1
+                self._ts += 1
+                committed = yield from self.run_txn(prof, self._ts)
+            if not committed:
+                continue
+            if sim.now >= self.warmup:
+                self.commits[prof.klass] += 1
+                self.commits["total"] += 1
+                self.commits[prof.kind] += 1
+                self.lat_sum[prof.klass] += sim.now - t0
+                self.lat_n[prof.klass] += 1
+                self.lat_sum["all"] += sim.now - t0
+                self.lat_n["all"] += 1
+
+    def run_txn(self, prof: TxnProfile, ts: int):
+        if self.sys.kind == "p4db" and prof.klass == "hot":
+            yield from self.switch_txn(prof)
+            return True
+        if self.sys.kind == "p4db" and prof.klass == "warm":
+            ok = yield from self.cold_part(prof, ts)
+            if not ok:
+                return False
+            yield from self.switch_txn(prof)
+            # commit: 2PC prepare already implicit; switch multicasts the
+            # decision, saving the second round (paper Fig 10)
+            if len(prof.participants) > 1:
+                yield ("delay", self.T.t_2pc_round)
+            self.release_all(prof, ts)
+            return True
+        # noswitch / lmswitch / p4db-cold: plain 2PL (+2PC)
+        ok = yield from self.cold_part(prof, ts, include_hot=True)
+        if not ok:
+            return False
+        if self.sys.early_release:
+            # Chiller-style: contended (hot) locks released right after the
+            # ops, before the commit rounds
+            for k, _, _ in prof.hot_ops:
+                lk = self.locks.get(k)
+                if lk is not None:
+                    lk.release(ts, self.sim)
+        if len(prof.participants) > 1 or any(
+                n != prof.home for _, n, _ in prof.hot_ops):
+            self._charge("commit_2pc", 2 * self.T.t_2pc_round)
+            yield ("delay", 2 * self.T.t_2pc_round)
+        else:
+            self._charge("local_work", self.T.t_commit_local)
+            yield ("delay", self.T.t_commit_local)   # log flush, locks held
+        self.release_all(prof, ts, include_hot=True)
+        return True
+
+    def switch_txn(self, prof: TxnProfile):
+        T = self.T
+        self._charge("switch", T.rtt_switch)
+        yield ("delay", T.rtt_switch / 2)
+        if prof.passes == 1:
+            yield ("delay", T.t_pipe)
+        else:
+            # multi-pass: pipeline lock + recirculations
+            t0 = self.sim.now
+            yield ("acquire", self.pipe)
+            self._charge("pipe_lock_wait", self.sim.now - t0)
+            rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
+            self._charge("recirc", (prof.passes - 1) * rc)
+            yield ("delay", T.t_pipe + (prof.passes - 1) * rc)
+            yield ("release", self.pipe)
+        yield ("delay", T.rtt_switch / 2)
+
+    def cold_part(self, prof: TxnProfile, ts: int, include_hot=False):
+        T = self.T
+        ops = list(prof.cold_ops)
+        hot_keys = {k for k, _, _ in prof.hot_ops}
+        if include_hot:
+            ops = ops + list(prof.hot_ops)
+        if include_hot and hot_keys and self.sys.kind == "lmswitch":
+            # NetLock: ONE batched lock request for all hot keys handled in
+            # the switch data plane (half node RTT); deny -> abort
+            yield ("delay", T.rtt_switch)
+            for key, node, mode in prof.hot_ops:
+                granted = yield ("lock", self.lock_of(key), mode, ts)
+                if not granted:
+                    self.release_all(prof, ts, include_hot=True)
+                    return False
+            for key, node, mode in prof.hot_ops:
+                yield ("delay", T.t_local_op if node == prof.home
+                       else T.rtt_node)
+            ops = list(prof.cold_ops)
+        for key, node, mode in ops:
+            hot = include_hot and key in hot_keys
+            if node == prof.home:
+                self._charge("local_work", T.t_local_op)
+                yield ("delay", T.t_local_op)
+            else:
+                self._charge("remote_access", T.rtt_node)
+                yield ("delay", T.rtt_node)
+            if hot or self._contended(key):
+                t0 = self.sim.now
+                granted = yield ("lock", self.lock_of(key), mode, ts)
+                self._charge("lock_acquisition", self.sim.now - t0)
+                if not granted:
+                    self.release_all(prof, ts, include_hot=include_hot)
+                    return False
+        return True
+
+    def _contended(self, key) -> bool:
+        # cold uniform keys: conflict probability ~ 1e-5; skip simulating
+        # their lock objects (latency is still charged)
+        return key in self.locks
+
+    def release_all(self, prof: TxnProfile, ts: int, include_hot=False):
+        keys = [k for k, _, _ in prof.cold_ops]
+        if include_hot:
+            keys += [k for k, _, _ in prof.hot_ops]
+        for k in keys:
+            lk = self.locks.get(k)
+            if lk is not None:
+                lk.release(ts, self.sim)
+
+    # --------------------------------------------------------------- run --
+    def run(self):
+        self.sim = Sim()
+        for node in range(self.n_nodes):
+            for w in range(self.wpn):
+                g = self.worker(node)
+                self.sim.spawn(g, delay=float(self.rng.random() * 1e-6))
+        self.sim.run(self.sim_time)
+        window = self.sim_time - self.warmup
+        tput = self.commits["total"] / window
+        out = dict(throughput=tput,
+                   commits=dict(self.commits), aborts=dict(self.aborts),
+                   breakdown=dict(self.breakdown))
+        for k in self.lat_n:
+            out[f"lat_{k}"] = self.lat_sum[k] / max(self.lat_n[k], 1)
+        return out

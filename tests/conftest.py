@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NB: no XLA_FLAGS here — smoke tests and benches must see the real device
+# count; only launch/dryrun.py forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

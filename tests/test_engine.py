@@ -1,0 +1,116 @@
+"""Switch-engine properties: all execution paths produce the serial-
+equivalent result; GIDs reflect serial order; state is recoverable."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import SwitchEngine
+from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
+                                SwitchConfig, empty_packets, make_packet,
+                                mark_multipass, split_passes)
+
+CFG = SwitchConfig(n_stages=6, regs_per_stage=16, max_instrs=5)
+
+
+def random_batch(rng, B, K, ops=(NOP, READ, WRITE, ADD), stage_sorted=False):
+    p = empty_packets(B, CFG)
+    p["op"] = rng.integers(min(ops), max(ops) + 1, (B, K)).astype(np.int32)
+    st_ = rng.integers(0, CFG.n_stages, (B, K)).astype(np.int32)
+    p["stage"] = np.sort(st_, axis=1) if stage_sorted else st_
+    p["reg"] = rng.integers(0, CFG.regs_per_stage, (B, K)).astype(np.int32)
+    p["operand"] = rng.integers(-100, 100, (B, K)).astype(np.int32)
+    return p
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+def test_affine_equals_serial(seed, B):
+    rng = np.random.default_rng(seed)
+    p = random_batch(rng, B, CFG.max_instrs)
+    regs0 = rng.integers(-50, 50, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, ok1, g1 = e1.execute(p, mode="serial")
+    r2, ok2, g2 = e2.execute(p, mode="affine")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+    np.testing.assert_array_equal(g1, g2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_staged_equals_serial_with_addp(seed):
+    rng = np.random.default_rng(seed)
+    B, K = 32, 4
+    p = empty_packets(B, CFG)
+    for b in range(B):
+        stages = np.sort(rng.choice(CFG.n_stages, size=K, replace=False))
+        for k in range(K):
+            if k > 0 and rng.random() < 0.4:
+                p["op"][b, k] = ADDP
+                p["operand"][b, k] = rng.integers(0, k)
+            else:
+                p["op"][b, k] = rng.choice([READ, WRITE, ADD])
+                p["operand"][b, k] = rng.integers(-50, 50)
+            p["stage"][b, k] = stages[k]
+            p["reg"][b, k] = rng.integers(0, CFG.regs_per_stage)
+    regs0 = rng.integers(0, 50, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, _, _ = e1.execute(p, mode="serial")
+    r2, _, _ = e2.execute(p, mode="staged")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+
+
+def test_pallas_equals_serial():
+    rng = np.random.default_rng(3)
+    p = random_batch(rng, 48, CFG.max_instrs, ops=(NOP, CADD))
+    regs0 = rng.integers(0, 100, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, ok1, _ = e1.execute(p, mode="serial")
+    r2, ok2, _ = e2.execute(p, mode="pallas")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(ok1, ok2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+
+
+def test_batch_order_is_serial_order():
+    """Two conflicting txns: second must observe the first (pipeline
+    no-reorder property, paper §5.1)."""
+    e = SwitchEngine(CFG)
+    p = empty_packets(2, CFG)
+    p["op"][0, 0], p["stage"][0, 0], p["reg"][0, 0], p["operand"][0, 0] = \
+        WRITE, 2, 5, 77
+    p["op"][1, 0], p["stage"][1, 0], p["reg"][1, 0] = READ, 2, 5
+    res, _, gids = e.execute(p)
+    assert res[1, 0] == 77
+    assert gids[0] < gids[1]
+
+
+def test_cadd_constrained_write():
+    e = SwitchEngine(CFG)
+    e.execute(make_packet([(WRITE, 0, 0, 5)], CFG))
+    res, ok, _ = e.execute(make_packet([(CADD, 0, 0, -9)], CFG))
+    assert not ok[0, 0] and e.read_all()[0, 0] == 5
+    res, ok, _ = e.execute(make_packet([(CADD, 0, 0, -3)], CFG))
+    assert ok[0, 0] and e.read_all()[0, 0] == 2
+
+
+def test_pass_splitting():
+    pk = make_packet([(READ, 0, 0, 0), (ADD, 2, 1, 5), (WRITE, 1, 0, 7)],
+                     CFG)
+    assert pk["is_multipass"][0]
+    assert len(split_passes(pk, 0)) == 2
+    pk = make_packet([(READ, 0, 0, 0), (ADD, 1, 1, 5), (WRITE, 2, 0, 7)],
+                     CFG)
+    assert not pk["is_multipass"][0]
+
+
+def test_snapshot_restore():
+    rng = np.random.default_rng(0)
+    e = SwitchEngine(CFG)
+    e.execute(random_batch(rng, 16, 4))
+    snap = e.snapshot()
+    e.execute(random_batch(rng, 16, 4))
+    e.restore(snap)
+    np.testing.assert_array_equal(e.read_all(), snap[0])
+    assert e.next_gid == snap[1]

@@ -1,0 +1,64 @@
+"""Declustered storage model: graph construction, capacity-bounded max-cut,
+direction-aware stage ordering, single-pass rates."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (ConflictGraph, Placement, make_layout,
+                               partition_maxcut, random_layout,
+                               single_pass_rate, txn_is_single_pass)
+from repro.core.packets import ADD, ADDP, READ, WRITE, SwitchConfig
+
+
+def test_coaccessed_tuples_land_in_distinct_stages():
+    traces = [[(1, READ), (2, WRITE)], [(2, READ), (3, WRITE)],
+              [(1, READ), (3, WRITE)]] * 5
+    pl = make_layout(traces, SwitchConfig(4, 4, 4))
+    stages = {pl.slot[t][0] for t in (1, 2, 3)}
+    assert len(stages) == 3
+    assert pl.stats["single_pass_rate"] == 1.0
+
+
+def test_direction_respected():
+    # read 1 feeds write 2 (ADDP): 1 must sit in an earlier stage
+    traces = [[(1, READ), (2, ADDP)]] * 10
+    pl = make_layout(traces, SwitchConfig(4, 4, 4))
+    assert pl.slot[1][0] < pl.slot[2][0]
+    assert pl.stats["single_pass_rate"] == 1.0
+
+
+def test_capacity_respected():
+    traces = [[(i, READ)] for i in range(40)]
+    pl = make_layout(traces, SwitchConfig(n_stages=10, regs_per_stage=4,
+                                          max_instrs=4))
+    per_stage = {}
+    for t, (s, r) in pl.slot.items():
+        per_stage[s] = per_stage.get(s, 0) + 1
+    assert all(v <= 4 for v in per_stage.values())
+    # register indices unique within a stage
+    assert len(set(pl.slot.values())) == len(pl.slot)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_optimal_beats_random_layout(seed):
+    rng = np.random.default_rng(seed)
+    # structured co-access: each txn takes one tuple per class
+    traces = []
+    for _ in range(50):
+        tr = [(int(c * 100 + rng.integers(5)), READ) for c in range(4)]
+        traces.append(tr)
+    sw = SwitchConfig(8, 8, 6)
+    opt = make_layout(traces, sw)
+    rnd = random_layout(traces, sw, seed=seed)
+    assert opt.stats["single_pass_rate"] >= rnd.stats["single_pass_rate"]
+    assert opt.stats["single_pass_rate"] == 1.0
+
+
+def test_single_pass_reorderable_vs_dependent():
+    pl = Placement({1: (3, 0), 2: (1, 0)})
+    # reorderable (two reads) -> distinct stages is enough
+    assert txn_is_single_pass([(1, READ), (2, READ)], pl)
+    # ADDP dependency in program order 1 -> 2 but stage(1) > stage(2)
+    assert not txn_is_single_pass([(1, READ), (2, ADDP)], pl)
+    # repeated tuple always multi-pass
+    assert not txn_is_single_pass([(1, READ), (1, WRITE)], pl)

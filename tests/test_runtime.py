@@ -1,0 +1,166 @@
+"""Distribution runtime: optimizer variants, checkpoint/restart + elastic
+restore, gradient compression, data determinism, sharding resolution."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.common.types import (ParallelConfig, ShapeConfig, TrainConfig)
+from repro.configs.registry import get_smoke
+from repro.data.pipeline import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import lm as LM
+from repro.optim import adamw
+from repro.optim.compress import (dequantize_int8, ef_compress_step,
+                                  hot_row_preaggregate, quantize_int8)
+
+
+def test_adamw_moment_dtypes_agree():
+    """int8/bf16 moments track fp32 within quantization tolerance."""
+    cfg = get_smoke("qwen1p5_0p5b")
+    params = LM.init_params(cfg, jax.random.PRNGKey(0))
+    grads = jax.tree.map(
+        lambda p: jnp.ones_like(p, jnp.float32) * 0.01, params)
+    tc = TrainConfig(warmup_steps=1)
+    outs = {}
+    for md in ("float32", "bfloat16", "int8"):
+        st_ = adamw.init_state(params, md)
+        p2, st2, m = adamw.apply_updates(params, grads, st_, tc, md)
+        outs[md] = np.asarray(jax.tree.leaves(p2)[0], np.float32)
+    np.testing.assert_allclose(outs["float32"], outs["bfloat16"],
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(outs["float32"], outs["int8"],
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_checkpoint_restart_bitexact(tmp_path):
+    """Train 6 steps; vs train 3 + restart + 3: identical params
+    (fault-tolerant restart correctness)."""
+    cfg = get_smoke("gemma_2b")
+    tc = TrainConfig(warmup_steps=2)
+    par = ParallelConfig(remat="none", microbatch=1)
+    step_fn = jax.jit(make_train_step(cfg, par, tc))
+    data = SyntheticLM(cfg, 32, 4)
+
+    def fresh():
+        p = LM.init_params(cfg, jax.random.PRNGKey(0))
+        return p, adamw.init_state(p, "float32")
+
+    # continuous run
+    p, o = fresh()
+    for s in range(6):
+        b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        p, o, _ = step_fn(p, o, b)
+    ref = np.asarray(jax.tree.leaves(p)[0], np.float32)
+
+    # interrupted run
+    p, o = fresh()
+    ck = Checkpointer(str(tmp_path))
+    for s in range(3):
+        b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        p, o, _ = step_fn(p, o, b)
+    ck.save(3, dict(params=p, m=o.m, ms=o.m_scale, v=o.v, vs=o.v_scale,
+                    step=o.step), blocking=True)
+    del p, o
+    step_r, tree = ck.restore()
+    assert step_r == 3
+    p = tree["params"]
+    o = adamw.AdamWState(jnp.asarray(tree["step"]), tree["m"], tree["ms"],
+                         tree["v"], tree["vs"])
+    p = jax.tree.map(jnp.asarray, p)
+    o = jax.tree.map(jnp.asarray, o)
+    for s in range(3, 6):
+        b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        p, o, _ = step_fn(p, o, b)
+    out = np.asarray(jax.tree.leaves(p)[0], np.float32)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_checkpoint_gc_and_atomicity(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, {"a": jnp.ones((4,)) * s}, blocking=True)
+    assert ck.list_steps() == [2, 3]
+    # a partial (non-.complete) checkpoint is invisible
+    os.makedirs(tmp_path / "step_00000009")
+    assert ck.latest_step() == 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_quantization_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 64)) * rng.uniform(0.01, 10),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    bound = np.asarray(s) / 2 + 1e-9
+    assert (err <= bound + 1e-6).all()
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32) * 0.01
+    resid = jnp.zeros_like(g)
+    acc_ef = jnp.zeros_like(g)
+    acc_naive = jnp.zeros_like(g)
+    for _ in range(50):
+        gq, resid = ef_compress_step(g, resid)
+        acc_ef = acc_ef + gq
+        q, s = quantize_int8(g)
+        acc_naive = acc_naive + dequantize_int8(q, s)
+    true = g * 50
+    assert float(jnp.abs(acc_ef - true).mean()) <= \
+        float(jnp.abs(acc_naive - true).mean()) + 1e-7
+
+
+def test_hot_row_preaggregate():
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 5, 64), jnp.int32)
+    g = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    uniq, agg, count = hot_row_preaggregate(ids, g)
+    # aggregated per-id sums must equal dense scatter-add
+    dense = np.zeros((5, 8), np.float32)
+    np.add.at(dense, np.asarray(ids), np.asarray(g))
+    uniq = np.asarray(uniq)
+    agg = np.asarray(agg)
+    for i in range(int(count)):
+        np.testing.assert_allclose(agg[i], dense[uniq[i]], rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    cfg = get_smoke("yi_34b")
+    a = SyntheticLM(cfg, 16, 8, dp_rank=0, dp_size=2)
+    b = SyntheticLM(cfg, 16, 8, dp_rank=1, dp_size=2)
+    full = SyntheticLM(cfg, 16, 8)
+    ba, bb, bf = a.batch(7), b.batch(7), full.batch(7)
+    np.testing.assert_array_equal(
+        np.concatenate([ba["tokens"], bb["tokens"]]), bf["tokens"])
+    np.testing.assert_array_equal(a.batch(7)["tokens"], ba["tokens"])
+
+
+def test_sharding_resolution_divisibility_guards():
+    import jax
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    from repro.parallel.sharding import spec_for
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # dims that don't divide fall back to replication without error
+    s = spec_for((7, 13), ("embed", "ff"), mesh)
+    assert s is not None
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    from repro.launch.train import train
+    params, loss = train("qwen1.5-0.5b", steps=4, batch=2, seq=32,
+                         smoke=True, ckpt_dir=str(tmp_path), ckpt_every=2)
+    assert np.isfinite(loss)
+    # restart continues from the checkpoint
+    params, loss2 = train("qwen1.5-0.5b", steps=6, batch=2, seq=32,
+                          smoke=True, ckpt_dir=str(tmp_path), ckpt_every=2)
+    assert np.isfinite(loss2)

@@ -1,0 +1,80 @@
+"""Timing-simulator sanity: the paper's qualitative claims must hold."""
+import numpy as np
+import pytest
+
+from benchmarks import common as C
+from repro.sim.des import Sim, SimLock
+from repro.sim.model import SystemConfig
+
+
+def test_des_lock_no_wait():
+    lk = SimLock("NO_WAIT")
+    assert lk.try_acquire(1, "S")
+    assert lk.try_acquire(2, "S")
+    assert lk.try_acquire(3, "X") is False
+    lk.release(1, Sim())
+    lk.release(2, Sim())
+    assert lk.try_acquire(3, "X")
+
+
+def test_des_lock_wait_die():
+    lk = SimLock("WAIT_DIE")
+    assert lk.try_acquire(5, "X")
+    assert lk.try_acquire(3, "X") is None     # older waits
+    assert lk.try_acquire(9, "X") is False    # younger dies
+
+
+@pytest.fixture(scope="module")
+def ycsb_a():
+    return C.ycsb_profiles(variant="A", n=1500)[0]
+
+
+def test_p4db_beats_noswitch_under_contention(ycsb_a):
+    p4 = C.run_sim(ycsb_a, SystemConfig(kind="p4db"), sim_time=0.015)
+    ns = C.run_sim(ycsb_a, SystemConfig(kind="noswitch"), sim_time=0.015)
+    assert p4["throughput"] > 2.5 * ns["throughput"]
+
+
+def test_lmswitch_no_big_gain_under_skew(ycsb_a):
+    lm = C.run_sim(ycsb_a, SystemConfig(kind="lmswitch"), sim_time=0.015)
+    ns = C.run_sim(ycsb_a, SystemConfig(kind="noswitch"), sim_time=0.015)
+    assert lm["throughput"] < 1.5 * ns["throughput"]
+
+
+def test_hot_txns_never_abort_on_switch(ycsb_a):
+    out = C.run_sim(ycsb_a, SystemConfig(kind="p4db"), sim_time=0.01)
+    assert out["aborts"].get("hot", 0) == 0
+
+
+def test_speedup_grows_with_contention():
+    profs, _ = C.ycsb_profiles(variant="A", n=1500)
+    sp = []
+    for w in (8, 20):
+        p4 = C.run_sim(profs, SystemConfig(kind="p4db"), workers=w,
+                       sim_time=0.015)
+        ns = C.run_sim(profs, SystemConfig(kind="noswitch"), workers=w,
+                       sim_time=0.015)
+        sp.append(p4["throughput"] / ns["throughput"])
+    assert sp[1] > sp[0]
+
+
+def test_optimal_layout_beats_random_for_multipass():
+    opt, _ = C.ycsb_profiles(variant="A", layout="optimal", n=1500)
+    rnd, _ = C.ycsb_profiles(variant="A", layout="random", n=1500)
+    hot_o = [p for p in opt if p.klass == "hot"]
+    hot_r = [p for p in rnd if p.klass == "hot"]
+    o = C.run_sim(hot_o, SystemConfig(kind="p4db"), sim_time=0.01)
+    r = C.run_sim(hot_r, SystemConfig(kind="p4db"), sim_time=0.01)
+    assert o["throughput"] > 1.5 * r["throughput"]
+
+
+def test_capacity_overflow_degrades_gracefully():
+    full, _ = C.ycsb_profiles(variant="A", hot_per_node=50, top_k=400,
+                              n=1500)
+    over, _ = C.ycsb_profiles(variant="A", hot_per_node=200, top_k=400,
+                              n=1500)
+    f = C.run_sim(full, SystemConfig(kind="p4db"), sim_time=0.01)
+    o = C.run_sim(over, SystemConfig(kind="p4db"), sim_time=0.01)
+    ns = C.run_sim(over, SystemConfig(kind="noswitch"), sim_time=0.01)
+    assert o["throughput"] <= f["throughput"]
+    assert o["throughput"] >= 0.8 * ns["throughput"]

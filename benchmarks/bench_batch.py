@@ -1,0 +1,168 @@
+"""Committed-txn throughput: per-txn loop vs the batched hot-path pipeline.
+
+Runs YCSB A/B/C and SmallBank through a functional Cluster twice — once via
+``run(t)`` per transaction (one switch dispatch per hot txn) and once via
+``run_batch`` at several batch sizes (one dispatch per hot group) — and
+reports throughput plus engine dispatch counts.  The headline measurement
+is a 256-txn all-hot YCSB-A batch: 1 dispatch vs 256 and the resulting
+hot-txn throughput ratio.
+
+  PYTHONPATH=src python benchmarks/bench_batch.py [--fast] [--out FILE]
+
+Emits BENCH_batch.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.hotset import build_hot_index
+from repro.core.packets import SwitchConfig
+from repro.db.dbms import Cluster
+from repro.workloads import smallbank, ycsb
+
+SW = SwitchConfig(n_stages=16, regs_per_stage=1024, max_instrs=16)
+N_NODES = 4
+
+
+def ycsb_workload(variant, n, all_hot=False):
+    p = ycsb.YCSBParams(n_nodes=N_NODES, keys_per_node=2000, hot_per_node=16,
+                        variant=variant,
+                        p_hot_txn=1.0 if all_hot else 0.75)
+    sample = ycsb.generate(np.random.default_rng(0), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 16 * N_NODES, SW)
+    txns = ycsb.generate(np.random.default_rng(1), n, p)
+    return txns, hi, []
+
+
+def smallbank_workload(n):
+    p = smallbank.SmallBankParams(n_nodes=N_NODES, accounts_per_node=200,
+                                  hot_per_node=8)
+    sample = smallbank.generate(np.random.default_rng(0), 3000, p)
+    hi = build_hot_index(smallbank.traces(sample), 8 * N_NODES * 2, SW)
+    txns = smallbank.generate(np.random.default_rng(1), n, p)
+    return txns, hi, [(k, 10_000) for k in smallbank.hot_keys(p)]
+
+
+def fresh_cluster(hi, loads):
+    c = Cluster(N_NODES, SW, hi, use_switch=True)
+    for k, v in loads:
+        c.load(k, v)
+    return c
+
+
+def run_per_txn(txns, hi, loads):
+    c = fresh_cluster(hi, loads)
+    t0 = time.perf_counter()
+    for t in txns:
+        c.run(t)
+    dt = time.perf_counter() - t0
+    return c, dt
+
+
+def run_batched(txns, hi, loads, batch_size):
+    c = fresh_cluster(hi, loads)
+    t0 = time.perf_counter()
+    for i in range(0, len(txns), batch_size):
+        c.run_batch(txns[i:i + batch_size])
+    dt = time.perf_counter() - t0
+    return c, dt
+
+
+def record(c, dt, n):
+    return dict(time_s=round(dt, 6),
+                commits=int(c.stats["commits"]),
+                hot=int(c.stats["hot"]),
+                txn_per_s=round(n / dt, 1),
+                committed_per_s=round(c.stats["commits"] / dt, 1),
+                dispatches=int(c.switch.dispatch_count))
+
+
+def bench_workload(name, txns, hi, loads, batch_sizes):
+    # warm run first so jit/AOT compiles are off the clock, then measure
+    run_per_txn(list(txns), hi, loads)
+    c, dt = run_per_txn(list(txns), hi, loads)
+    out = {"n_txns": len(txns), "per_txn": record(c, dt, len(txns)),
+           "batched": {}}
+    for bs in batch_sizes:
+        run_batched(list(txns), hi, loads, bs)
+        c, dt = run_batched(list(txns), hi, loads, bs)
+        r = record(c, dt, len(txns))
+        r["speedup_vs_per_txn"] = round(
+            r["committed_per_s"] / out["per_txn"]["committed_per_s"], 2)
+        out["batched"][str(bs)] = r
+    best = max(out["batched"].values(), key=lambda r: r["committed_per_s"])
+    print(f"  {name:12s} per-txn {out['per_txn']['committed_per_s']:>10.0f} "
+          f"commits/s ({out['per_txn']['dispatches']} dispatches)  "
+          f"best batched {best['committed_per_s']:>10.0f} commits/s "
+          f"({best['dispatches']} dispatches, "
+          f"{best['speedup_vs_per_txn']}x)")
+    return out
+
+
+def bench_headline():
+    """256 all-hot YCSB-A txns: exactly 1 dispatch vs 256."""
+    txns, hi, loads = ycsb_workload("A", 256, all_hot=True)
+    c = fresh_cluster(hi, loads)
+    assert all(c.classify(t) == "hot" for t in txns), "headline needs hot"
+    # warm both paths
+    run_per_txn(list(txns), hi, loads)
+    run_batched(list(txns), hi, loads, 256)
+    c1, dt1 = run_per_txn(list(txns), hi, loads)
+    c2, dt2 = run_batched(list(txns), hi, loads, 256)
+    assert c1.switch.dispatch_count == 256, c1.switch.dispatch_count
+    assert c2.switch.dispatch_count == 1, c2.switch.dispatch_count
+    assert c1.stats["commits"] == c2.stats["commits"] == 256
+    speedup = dt1 / dt2
+    print(f"  headline: 256-txn all-hot YCSB-A batch — dispatches "
+          f"{c1.switch.dispatch_count} -> {c2.switch.dispatch_count}, "
+          f"hot-txn throughput {256 / dt1:,.0f} -> {256 / dt2:,.0f} "
+          f"commits/s ({speedup:.1f}x)")
+    return dict(n_txns=256,
+                per_txn=record(c1, dt1, 256),
+                batched_256=record(c2, dt2, 256),
+                speedup=round(speedup, 2))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="small smoke configuration for CI (~30 s)")
+    ap.add_argument("--out", default="BENCH_batch.json")
+    args = ap.parse_args()
+
+    n = 192 if args.fast else 512
+    batch_sizes = (64, 256) if args.fast else (32, 64, 128, 256)
+
+    results = {"config": dict(fast=args.fast, n_txns=n,
+                              batch_sizes=list(batch_sizes),
+                              n_nodes=N_NODES, n_stages=SW.n_stages,
+                              regs_per_stage=SW.regs_per_stage)}
+    print("batched hot-path pipeline benchmark "
+          f"(n={n}, batch sizes {list(batch_sizes)})")
+    results["headline_ycsb_a_hot256"] = bench_headline()
+    for variant in ("A", "B", "C"):
+        txns, hi, loads = ycsb_workload(variant, n)
+        results[f"ycsb_{variant}"] = bench_workload(
+            f"ycsb_{variant}", txns, hi, loads, batch_sizes)
+    txns, hi, loads = smallbank_workload(n)
+    results["smallbank"] = bench_workload("smallbank", txns, hi, loads,
+                                          batch_sizes)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+    hl = results["headline_ycsb_a_hot256"]
+    if hl["speedup"] < 3.0:
+        print(f"WARNING: headline speedup {hl['speedup']}x < 3x target")
+
+
+if __name__ == "__main__":
+    main()

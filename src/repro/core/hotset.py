@@ -5,8 +5,10 @@ replicated to every database node's partition manager."""
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.layout import Placement, make_layout
 from repro.core.packets import SwitchConfig
@@ -28,8 +30,19 @@ def detect_hotset(traces, top_k: int) -> List[int]:
 @dataclass
 class HotIndex:
     """Replicated per-node index over hot tuples (paper §6.1): tells a node
-    whether a txn is hot/cold/warm and how to build the switch packet."""
+    whether a txn is hot/cold/warm and how to build the switch packet.
+
+    Besides the dict interface, the index exposes sorted numpy lookup
+    arrays (built lazily, cached) so the batched packet builder can map
+    whole key vectors to (stage, reg) slots with one ``searchsorted`` —
+    no per-key Python dict probes on the hot path."""
     placement: Placement
+    _keys: Optional[np.ndarray] = field(default=None, repr=False,
+                                        compare=False)
+    _stages: Optional[np.ndarray] = field(default=None, repr=False,
+                                          compare=False)
+    _regs: Optional[np.ndarray] = field(default=None, repr=False,
+                                        compare=False)
 
     def is_hot(self, tuple_id) -> bool:
         return tuple_id in self.placement.slot
@@ -44,6 +57,44 @@ class HotIndex:
 
     def slot(self, tuple_id):
         return self.placement.slot[tuple_id]
+
+    # ------------------------------------------------- vectorized lookup --
+    def _ensure_arrays(self):
+        # rebuilt when placement.slot grows/shrinks; in-place *moves* of
+        # existing keys are not detected — placements are treated as frozen
+        # after construction (re-layout builds a new HotIndex)
+        if self._keys is None or self._keys.size != len(self.placement.slot):
+            items = sorted(self.placement.slot.items())
+            self._keys = np.array([k for k, _ in items], np.int64)
+            self._stages = np.array([s for _, (s, _) in items], np.int32)
+            self._regs = np.array([r for _, (_, r) in items], np.int32)
+
+    def hot_mask_np(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized ``is_hot`` over a key vector."""
+        self._ensure_arrays()
+        keys = np.asarray(keys, np.int64)
+        if self._keys.size == 0:
+            return np.zeros(keys.shape, bool)
+        idx = np.searchsorted(self._keys, keys)
+        idx = np.minimum(idx, self._keys.size - 1)
+        return self._keys[idx] == keys
+
+    def slots_np(self, keys: np.ndarray):
+        """Vectorized ``slot`` over a key vector of hot tuples.
+
+        Returns (stage [n], reg [n]) int32 arrays; raises KeyError if any
+        key is not hot (mirrors the dict lookup)."""
+        self._ensure_arrays()
+        keys = np.asarray(keys, np.int64)
+        if keys.size == 0:
+            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+        idx = np.searchsorted(self._keys, keys) if self._keys.size else None
+        if idx is None or (idx >= self._keys.size).any() or \
+                (self._keys[np.minimum(idx, self._keys.size - 1)]
+                 != keys).any():
+            missing = keys[~self.hot_mask_np(keys)]
+            raise KeyError(f"keys not in hot index: {missing[:4].tolist()}")
+        return self._stages[idx], self._regs[idx]
 
 
 def build_hot_index(traces, top_k: int, switch: SwitchConfig,

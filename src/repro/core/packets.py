@@ -111,5 +111,119 @@ def is_single_pass(p: Dict[str, np.ndarray], i: int) -> bool:
 
 def mark_multipass(p: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     for i in range(p["op"].shape[0]):
-        p["is_multipass"][i] = not is_single_pass(p, i)
+        passes = split_passes(p, i)
+        p["is_multipass"][i] = len(passes) > 1
+        p["nb_recircs"][i] = len(passes) - 1
     return p
+
+
+def mark_multipass_batch(p: Dict[str, np.ndarray],
+                         n_ops: np.ndarray) -> Dict[str, np.ndarray]:
+    """Vectorized ``mark_multipass`` for packets whose instructions are
+    densely packed from slot 0 (NOPs only in the tail, as ``build_packets``
+    emits): a new pass starts wherever the stage sequence fails to strictly
+    increase.  Also fills ``nb_recircs`` (= passes - 1)."""
+    st = p["stage"]
+    B, K = st.shape
+    valid = np.arange(K)[None, :] < np.asarray(n_ops)[:, None]
+    breaks = (st[:, 1:] <= st[:, :-1]) & valid[:, 1:]
+    p["is_multipass"] = breaks.any(axis=1)
+    p["nb_recircs"] = breaks.sum(axis=1).astype(np.int32)
+    return p
+
+
+def build_packets(txns, hot_index, cfg: SwitchConfig):
+    """Vectorized batch packet assembly: one packet per hot transaction, in
+    admission (list) order — the switch executes the batch in exactly this
+    serial order (paper §5.1).
+
+    Beyond the initial flatten of the Python op tuples, all work — slot
+    lookup, reorderability analysis, per-packet stage sorting, scatter into
+    the [B, K] arrays, multipass marking — is pure numpy with no per-op
+    Python loops.
+
+    Ordering matches the per-txn builder (``Cluster._to_packet``):
+    dependency-free transactions (unique keys, no ADDP) are sorted by
+    stage so the declustered layout yields single-pass packets; all others
+    keep program order.
+
+    Returns ``(pkts, meta)`` where meta carries:
+      * ``has_cadd`` / ``has_addp`` — batch opcode presence, so the engine
+        can pick its execution path without re-scanning arrays on host,
+      * ``n_ops`` [B] — instruction count per packet,
+      * ``order`` [B, K] — packet slot -> txn op index permutation.
+    """
+    B = len(txns)
+    K = cfg.max_instrs
+    pkts = empty_packets(B, cfg)
+    if B == 0:
+        return pkts, dict(has_cadd=False, has_addp=False,
+                          addp_unsafe=False,
+                          n_ops=np.zeros(0, np.int64),
+                          order=np.zeros((0, K), np.int64))
+    n_ops = np.fromiter((len(t.ops) for t in txns), np.int64, B)
+    if n_ops.max(initial=0) > K:
+        raise ValueError(f"txn with > max_instrs={K} ops")
+    flat = np.array([o for t in txns for o in t.ops], np.int64).reshape(-1, 3)
+    opc = flat[:, 0].astype(np.int32)
+    keys = flat[:, 1]
+    operand = flat[:, 2].astype(np.int32)
+    row = np.repeat(np.arange(B), n_ops)
+    offsets = np.cumsum(n_ops) - n_ops
+    pos = np.arange(len(flat)) - np.repeat(offsets, n_ops)
+    stage, reg = hot_index.slots_np(keys)
+
+    # reorderable txns: unique keys and no ADDP (layout.trace_reorderable)
+    by_key = np.lexsort((keys, row))
+    dup = (row[by_key][1:] == row[by_key][:-1]) & \
+          (keys[by_key][1:] == keys[by_key][:-1])
+    reorder = np.ones(B, bool)
+    reorder[row[by_key][1:][dup]] = False
+    has_addp_row = np.zeros(B, bool)
+    np.logical_or.at(has_addp_row, row, opc == ADDP)
+    reorder &= ~has_addp_row
+
+    # within each packet: sort by stage if reorderable, else program order;
+    # ties keep program order (stable, matching list.sort)
+    sort_key = np.where(reorder[row], stage, pos.astype(np.int32))
+    perm = np.lexsort((pos, sort_key, row))
+    slot = pos                                   # rows stay contiguous
+    pkts["op"][row, slot] = opc[perm]
+    pkts["stage"][row, slot] = stage[perm]
+    pkts["reg"][row, slot] = reg[perm]
+    pkts["operand"][row, slot] = operand[perm]
+    order = np.zeros((B, K), np.int64)
+    order[row, slot] = pos[perm]
+    mark_multipass_batch(pkts, n_ops)
+    meta = dict(has_cadd=bool((opc == CADD).any()),
+                has_addp=bool(has_addp_row.any()),
+                addp_unsafe=addp_needs_serial(pkts),
+                n_ops=n_ops, order=order)
+    return pkts, meta
+
+
+def scan_flags(p: Dict[str, np.ndarray]) -> Dict[str, bool]:
+    """Host-side opcode-presence scan for a packet batch — the same three
+    flags ``build_packets`` returns in its meta, for packets built by other
+    paths (``_to_packet``, tests)."""
+    op = np.asarray(p["op"])
+    has_cadd = bool((op == CADD).any())
+    has_addp = bool((op == ADDP).any())
+    return dict(has_cadd=has_cadd, has_addp=has_addp,
+                addp_unsafe=has_addp and addp_needs_serial(p))
+
+
+def addp_needs_serial(p: Dict[str, np.ndarray]) -> bool:
+    """True if any ADDP instruction's source slot executes at the same or a
+    later stage than the ADDP itself.  The staged engine forwards results
+    from *earlier* stages only (the single-pass property the declustered
+    layout guarantees); such a packet is multipass on real hardware and
+    must take the serial path here."""
+    op = np.asarray(p["op"])
+    if not (op == ADDP).any():
+        return False
+    stage = np.asarray(p["stage"])
+    K = op.shape[1]
+    src = np.clip(np.asarray(p["operand"]), 0, K - 1)
+    src_stage = np.take_along_axis(stage, src, axis=1)
+    return bool(((op == ADDP) & (src_stage >= stage)).any())

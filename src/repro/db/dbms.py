@@ -22,10 +22,11 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import SwitchEngine
+from repro.core.engine import SwitchEngine, init_registers
 from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
-                                SwitchConfig, empty_packets, mark_multipass)
+                                SwitchConfig, build_packets, empty_packets,
+                                mark_multipass, scan_flags)
 from repro.db.txn import Txn, node_of
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
@@ -102,12 +103,14 @@ class Cluster:
 
     def __init__(self, n_nodes: int, switch_cfg: SwitchConfig,
                  hot_index: Optional[HotIndex] = None,
-                 protocol: str = NO_WAIT, use_switch: bool = True):
+                 protocol: str = NO_WAIT, use_switch: bool = True,
+                 switch_mode: str = "auto"):
         self.nodes = [DBNode(i, protocol) for i in range(n_nodes)]
         self.switch_cfg = switch_cfg
         self.switch = SwitchEngine(switch_cfg)
         self.hot_index = hot_index
         self.use_switch = use_switch and hot_index is not None
+        self.switch_mode = switch_mode
         self._ts = 0
         self.stats = collections.Counter()
 
@@ -126,32 +129,32 @@ class Cluster:
 
     # -------------------------------------------------------- execution --
     def run(self, txn: Txn, max_retries: int = 10):
-        for _ in range(max_retries):
-            try:
-                return self._run_once(txn)
-            except Abort:
-                self.stats["aborts"] += 1
-                for n in self.nodes:
-                    n.release_all(txn.tid)
-        self.stats["gave_up"] += 1
-        return None
-
-    def _run_once(self, txn: Txn):
         kind = self.classify(txn)
-        self.stats[kind] += 1
-        if kind == "hot":
+        if kind == "hot":                 # switch txns are abort-free (§5)
+            self.stats["hot"] += 1
             return self._run_hot(txn)
-        if kind == "cold":
-            return self._run_cold(txn)
-        return self._run_warm(txn)
+        return self._run_with_retries(txn, kind, max_retries)
+
+    def _validate_mode(self, flags: dict):
+        """Reject an explicit switch_mode the packets cannot run under
+        BEFORE any switch_send is logged — a send entry counts as committed
+        in recovery, so it must never precede a refused dispatch."""
+        if self.switch_mode != "auto":
+            SwitchEngine._resolve_mode(self.switch_mode, flags["has_cadd"],
+                                       flags["has_addp"],
+                                       flags["addp_unsafe"])
 
     # hot: switch-only, abort-free, no coordination (paper §5)
     def _run_hot(self, txn: Txn):
         home = self.nodes[txn.home]
         pkt, order = self._to_packet(txn)
+        flags = scan_flags(pkt)
+        self._validate_mode(flags)
         home.log("switch_send", txn.tid,
                  ops=[(o, k, v) for o, k, v in txn.ops])
-        res, ok, gids = self.switch.execute(pkt)
+        res_d, ok, gids = self.switch.execute_batch(pkt, flags,
+                                                    mode=self.switch_mode)
+        res = np.asarray(res_d)
         home.log("switch_result", txn.tid, gid=int(gids[0]),
                  results=res[0, :len(txn.ops)].tolist())
         self.stats["commits"] += 1
@@ -161,6 +164,98 @@ class Cluster:
         for slot, i in enumerate(order):
             out[i] = int(res[0, slot])
         return out
+
+    # ------------------------------------------------- batched execution --
+    def run_batch(self, txns: List[Txn], max_retries: int = 10):
+        """Execute a batch of transactions with the grouped switch hot path.
+
+        Semantics are identical to ``[self.run(t) for t in txns]``: txns
+        are processed in admission order, and since the switch serializes a
+        packet batch in batch order (paper §5.1), executing a *run* of
+        consecutive hot txns as one ``execute_batch`` dispatch commits them
+        in exactly the order the per-txn loop would — same results, same
+        register state, same GIDs.  The pending hot group is flushed before
+        any warm txn (whose switch sub-txn must see prior hot effects and
+        claim the next GID); cold txns touch no hot key, so they commute
+        with the buffered group and run inline.  WAL entries are batched:
+        all ``switch_send`` records for a group are logged before the one
+        dispatch, all ``switch_result`` records after it.  Note this
+        widens the in-flight window recovery can observe: a crash between
+        the send loop and the result loop leaves the whole group as
+        unknown-GID entries, which ``crash_switch_and_recover`` replays in
+        an arbitrary order — legal, because no client received a result
+        for any of them, so any serialization of in-flight txns is
+        recoverable (paper §A.3); but unlike the per-txn loop the replayed
+        registers may then differ from the pre-crash state.
+
+        One divergence: under an *explicit* ``switch_mode``, a group is
+        validated (and rejected) as a unit before any send is logged,
+        whereas the per-txn loop would commit the compatible prefix before
+        raising on the first incompatible txn.  ``auto`` mode never
+        rejects, so the equivalence contract is unconditional there.
+
+        Returns the per-txn result lists in admission order (None where a
+        txn exhausted its retries)."""
+        results: List[Optional[list]] = [None] * len(txns)
+        pending: List[Tuple[int, Txn]] = []
+        for i, txn in enumerate(txns):
+            kind = self.classify(txn)
+            if kind == "hot":
+                self.stats["hot"] += 1
+                pending.append((i, txn))
+                continue
+            if kind == "warm":
+                self._flush_hot_group(pending, results)
+            results[i] = self._run_with_retries(txn, kind, max_retries)
+        self._flush_hot_group(pending, results)
+        return results
+
+    def _run_with_retries(self, txn: Txn, kind: str, max_retries: int):
+        fn = self._run_cold if kind == "cold" else self._run_warm
+        for _ in range(max_retries):
+            self.stats[kind] += 1
+            try:
+                return fn(txn)
+            except Abort:
+                self.stats["aborts"] += 1
+                for n in self.nodes:
+                    n.release_all(txn.tid)
+            except Exception:
+                # non-Abort failures (e.g. a rejected explicit switch_mode)
+                # must not leak this txn's locks while propagating
+                for n in self.nodes:
+                    n.release_all(txn.tid)
+                raise
+        self.stats["gave_up"] += 1
+        return None
+
+    def _flush_hot_group(self, pending: List[Tuple[int, Txn]],
+                         results: List[Optional[list]]):
+        """Commit all buffered hot txns in ONE switch dispatch."""
+        if not pending:
+            return
+        group = [t for _, t in pending]
+        pkts, meta = build_packets(group, self.hot_index, self.switch_cfg)
+        self._validate_mode(meta)
+        for t in group:
+            self.nodes[t.home].log("switch_send", t.tid,
+                                   ops=[(o, k, v) for o, k, v in t.ops])
+        res_d, ok_d, gids = self.switch.execute_batch(
+            pkts, meta, mode=self.switch_mode)
+        res = np.asarray(res_d)                  # one host sync per group
+        order = meta["order"]
+        for b, (i, t) in enumerate(pending):
+            n_ops = len(t.ops)
+            self.nodes[t.home].log("switch_result", t.tid, gid=int(gids[b]),
+                                   results=res[b, :n_ops].tolist())
+            self.stats["commits"] += 1
+            if pkts["is_multipass"][b]:
+                self.stats["multipass"] += 1
+            out = [0] * n_ops
+            for slot in range(n_ops):
+                out[order[b, slot]] = int(res[b, slot])
+            results[i] = out
+        pending.clear()
 
     def _to_packet(self, txn: Txn):
         """Build the switch packet; dependency-free op lists are sorted by
@@ -245,10 +340,15 @@ class Cluster:
         # offloaded too (paper §6.2); workloads avoid it by construction.
         cold_txn = Txn(txn.kind, [op for _, op in cold_ops], txn.home,
                        tid=txn.tid)
-        cold_res = self._exec_on_nodes(cold_txn, ts=self._ts)
-        # cold part can no longer abort -> send switch sub-txn
         hot_txn = Txn(txn.kind, [op for _, op in hot_ops], txn.home,
                       tid=txn.tid)
+        # an explicit switch_mode that rejects the hot sub-txn must fail
+        # BEFORE the cold part takes locks and applies/logs its writes
+        if self.switch_mode != "auto":
+            pkt, _ = self._to_packet(hot_txn)
+            self._validate_mode(scan_flags(pkt))
+        cold_res = self._exec_on_nodes(cold_txn, ts=self._ts)
+        # cold part can no longer abort -> send switch sub-txn
         hot_res = self._run_hot(hot_txn)
         # commit cold part everywhere (2PC decision broadcast)
         for p in {node_of(k) for k in cold_txn.keys()}:
@@ -283,7 +383,8 @@ class Cluster:
         # values were offloaded at setup; replay assumes log captures all
         # mutations since offload, so start from the offload snapshot:
         if getattr(self, "_offload_snapshot", None) is not None:
-            self.switch.registers = self._offload_snapshot
+            self.switch.registers = init_registers(self.switch_cfg,
+                                                   self._offload_snapshot)
         order = [se for _, se, _ in known]
         order += [se for _, se, _ in unknown]   # no dependency -> any order
         for se in order:
@@ -293,7 +394,9 @@ class Cluster:
         return len(known), len(unknown)
 
     def snapshot_offload(self):
-        self._offload_snapshot = self.switch.registers
+        # host copy: the live register buffer is donated to later batched
+        # calls, so a device-array reference would be invalidated on TPU
+        self._offload_snapshot = np.asarray(self.switch.registers).copy()
 
     def crash_node_and_recover(self, node_id: int):
         n = self.nodes[node_id]

@@ -26,14 +26,12 @@ def switch_exec(registers, op, stage, reg, val, chunk=1024, interpret=None):
     S, R = registers.shape
     B, K = op.shape
     n = B * K
-    pad = (-n) % chunk
-    opf = jnp.concatenate([op.reshape(-1),
-                           jnp.full((pad,), NOP, jnp.int32)])
     g = (stage * R + reg).reshape(-1)
-    gf = jnp.concatenate([g, jnp.zeros((pad,), jnp.int32)])
-    vf = jnp.concatenate([val.reshape(-1), jnp.zeros((pad,), jnp.int32)])
-    regs, res, ok = switch_txn_call(registers.reshape(-1), opf, gf, vf,
-                                    chunk=min(chunk, n + pad),
+    # the kernel NOP-pads any stream length to the next chunk boundary;
+    # capping chunk at n keeps small batches from running a mostly-NOP chunk
+    regs, res, ok = switch_txn_call(registers.reshape(-1), op.reshape(-1),
+                                    g, val.reshape(-1),
+                                    chunk=min(chunk, max(n, 1)),
                                     interpret=interpret)
-    return (regs.reshape(S, R), res[:n].reshape(B, K),
-            ok[:n].reshape(B, K).astype(bool))
+    return (regs.reshape(S, R), res.reshape(B, K),
+            ok.reshape(B, K).astype(bool))

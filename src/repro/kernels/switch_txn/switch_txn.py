@@ -60,27 +60,37 @@ def _kernel(op_ref, g_ref, val_ref, regs_in_ref, regs_out_ref, res_ref,
 
 def switch_txn_call(registers_flat, op, g, val, *, chunk=1024,
                     interpret=True):
-    """registers_flat: [n_slots] int32; op/g/val: [N] int32 (N % chunk == 0).
+    """registers_flat: [n_slots] int32; op/g/val: [N] int32, any N >= 1.
+
+    Streams that are not a multiple of ``chunk`` are padded with NOP
+    instructions up to the next chunk boundary (NOPs leave registers and
+    results untouched); the padded tail is sliced off before returning.
 
     Returns (new_registers [n_slots], results [N], ok [N] int32)."""
     n_slots = registers_flat.shape[0]
     n = op.shape[0]
-    assert n % chunk == 0, (n, chunk)
-    n_chunks = n // chunk
+    pad = (-n) % chunk
+    if pad:
+        zeros = jnp.zeros((pad,), jnp.int32)
+        op = jnp.concatenate([op, jnp.full((pad,), NOP, jnp.int32)])
+        g = jnp.concatenate([g, zeros])
+        val = jnp.concatenate([val, zeros])
+    n_chunks = (n + pad) // chunk
     kernel = functools.partial(_kernel, chunk=chunk, n_slots=n_slots,
                                n_chunks=n_chunks)
     stream_spec = pl.BlockSpec((chunk,), lambda i: (i,))
     full_spec = pl.BlockSpec((n_slots,), lambda i: (0,))
-    return pl.pallas_call(
+    regs, res, ok = pl.pallas_call(
         kernel,
         grid=(n_chunks,),
         in_specs=[stream_spec, stream_spec, stream_spec, full_spec],
         out_specs=[full_spec, stream_spec, stream_spec],
         out_shape=[
             jax.ShapeDtypeStruct((n_slots,), jnp.int32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((n_slots,), jnp.int32)],
         interpret=interpret,
     )(op, g, val, registers_flat)
+    return regs, res[:n], ok[:n]

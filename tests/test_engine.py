@@ -1,8 +1,11 @@
 """Switch-engine properties: all execution paths produce the serial-
-equivalent result; GIDs reflect serial order; state is recoverable."""
+equivalent result; GIDs reflect serial order; state is recoverable.
+
+Deterministic seed sweeps live here; the hypothesis-driven property
+versions are in test_engine_properties.py (skipped when hypothesis is not
+installed)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import SwitchEngine
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
@@ -22,25 +25,9 @@ def random_batch(rng, B, K, ops=(NOP, READ, WRITE, ADD), stage_sorted=False):
     return p
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
-def test_affine_equals_serial(seed, B):
-    rng = np.random.default_rng(seed)
-    p = random_batch(rng, B, CFG.max_instrs)
-    regs0 = rng.integers(-50, 50, (CFG.n_stages, CFG.regs_per_stage))
-    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
-    r1, ok1, g1 = e1.execute(p, mode="serial")
-    r2, ok2, g2 = e2.execute(p, mode="affine")
-    np.testing.assert_array_equal(r1, r2)
-    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
-    np.testing.assert_array_equal(g1, g2)
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1))
-def test_staged_equals_serial_with_addp(seed):
-    rng = np.random.default_rng(seed)
-    B, K = 32, 4
+def staged_addp_batch(rng, B=32, K=4):
+    """Random batch with stage-sorted packets and safe (earlier-stage
+    source) ADDP instructions — the shape the declustered layout emits."""
     p = empty_packets(B, CFG)
     for b in range(B):
         stages = np.sort(rng.choice(CFG.n_stages, size=K, replace=False))
@@ -53,12 +40,52 @@ def test_staged_equals_serial_with_addp(seed):
                 p["operand"][b, k] = rng.integers(-50, 50)
             p["stage"][b, k] = stages[k]
             p["reg"][b, k] = rng.integers(0, CFG.regs_per_stage)
+    return p
+
+
+@pytest.mark.parametrize("seed,B", [(0, 1), (1, 3), (2, 17), (3, 33),
+                                    (4, 64)])
+def test_affine_equals_serial(seed, B):
+    rng = np.random.default_rng(seed)
+    p = random_batch(rng, B, CFG.max_instrs)
+    regs0 = rng.integers(-50, 50, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, ok1, g1 = e1.execute(p, mode="serial")
+    r2, ok2, g2 = e2.execute(p, mode="affine")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+    np.testing.assert_array_equal(g1, g2)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_staged_equals_serial_with_addp(seed):
+    rng = np.random.default_rng(seed)
+    p = staged_addp_batch(rng)
     regs0 = rng.integers(0, 50, (CFG.n_stages, CFG.regs_per_stage))
     e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
     r1, _, _ = e1.execute(p, mode="serial")
     r2, _, _ = e2.execute(p, mode="staged")
     np.testing.assert_array_equal(r1, r2)
     np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+
+
+def test_unsafe_addp_dispatches_serial():
+    """An ADDP whose source slot sits at a later stage (multipass packet)
+    must take the serial path in auto mode and be rejected by staged."""
+    p = empty_packets(1, CFG)
+    # READ at stage 3; ADDP at stage 1 referencing it -> unsafe
+    p["op"][0, 0], p["stage"][0, 0], p["reg"][0, 0] = READ, 3, 2
+    p["op"][0, 1], p["stage"][0, 1], p["reg"][0, 1] = ADDP, 1, 5
+    p["operand"][0, 1] = 0
+    regs0 = np.zeros((CFG.n_stages, CFG.regs_per_stage), np.int32)
+    regs0[3, 2] = 40
+    regs0[1, 5] = 2
+    e = SwitchEngine(CFG, regs0)
+    res, _, _ = e.execute(p)                     # auto -> serial
+    assert res[0, 1] == 42
+    assert e.read_all()[1, 5] == 42
+    with pytest.raises(ValueError):
+        SwitchEngine(CFG, regs0).execute(p, mode="staged")
 
 
 def test_pallas_equals_serial():

@@ -1,0 +1,38 @@
+"""Hypothesis property tests for the switch engines (the deterministic
+seed-sweep versions live in test_engine.py so coverage survives containers
+without hypothesis installed)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import SwitchEngine
+from test_engine import CFG, random_batch, staged_addp_batch
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+def test_affine_equals_serial(seed, B):
+    rng = np.random.default_rng(seed)
+    p = random_batch(rng, B, CFG.max_instrs)
+    regs0 = rng.integers(-50, 50, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, ok1, g1 = e1.execute(p, mode="serial")
+    r2, ok2, g2 = e2.execute(p, mode="affine")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())
+    np.testing.assert_array_equal(g1, g2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_staged_equals_serial_with_addp(seed):
+    rng = np.random.default_rng(seed)
+    p = staged_addp_batch(rng)
+    regs0 = rng.integers(0, 50, (CFG.n_stages, CFG.regs_per_stage))
+    e1, e2 = SwitchEngine(CFG, regs0), SwitchEngine(CFG, regs0)
+    r1, _, _ = e1.execute(p, mode="serial")
+    r2, _, _ = e2.execute(p, mode="staged")
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(e1.read_all(), e2.read_all())

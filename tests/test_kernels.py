@@ -14,6 +14,8 @@ from repro.kernels.switch_txn.ref import switch_exec_ref
     (4, 8, 16, 3, 16),
     (6, 32, 64, 5, 64),
     (12, 64, 100, 8, 128),     # non-multiple of chunk -> padding path
+    (6, 32, 37, 5, 64),        # chunk > stream -> single padded chunk
+    (4, 16, 1, 7, 4),          # B=1 per-txn shape, odd K
 ])
 def test_switch_txn_kernel(S, R, B, K, chunk):
     rng = np.random.default_rng(S * 1000 + B)

@@ -1,7 +1,7 @@
 """Declustered storage model: graph construction, capacity-bounded max-cut,
 direction-aware stage ordering, single-pass rates."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.layout import (ConflictGraph, Placement, make_layout,
                                partition_maxcut, random_layout,

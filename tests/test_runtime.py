@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.ckpt.checkpoint import Checkpointer
 from repro.common.types import (ParallelConfig, ShapeConfig, TrainConfig)

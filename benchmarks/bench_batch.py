@@ -7,9 +7,15 @@ reports throughput plus engine dispatch counts.  The headline measurement
 is a 256-txn all-hot YCSB-A batch: 1 dispatch vs 256 and the resulting
 hot-txn throughput ratio.
 
-  PYTHONPATH=src python benchmarks/bench_batch.py [--fast] [--out FILE]
+A second section runs the TIMING simulator (``repro.sim``) with the
+matching batched switch-admission model: per-txn rounds
+(batch_window=0/max_batch=1, pinned to reproduce the defaults exactly)
+against batched rounds across YCSB A/B/C + SmallBank + all-hot YCSB-A.
 
-Emits BENCH_batch.json.
+  PYTHONPATH=src python benchmarks/bench_batch.py \\
+      [--fast] [--sim-only] [--out FILE] [--out-sim FILE]
+
+Emits BENCH_batch.json and BENCH_sim_batch.json.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import os
 import sys
 import time
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
@@ -131,12 +138,76 @@ def bench_headline():
                 speedup=round(speedup, 2))
 
 
+def sim_batch(fast: bool, out_path: str):
+    """Timing-sim batched admission: per-txn vs batched switch rounds."""
+    from benchmarks import common as C
+    from repro.sim.model import SystemConfig
+
+    sim_time = 0.01 if fast else C.SIM_TIME
+    n = 1000 if fast else 3000
+    sweeps = C.SIM_BATCH_SWEEP_FAST if fast else C.SIM_BATCH_SWEEP_FULL
+    workloads = C.sim_batch_workloads(fast, n=n)
+
+    results = {"config": dict(fast=fast, sim_time=sim_time, n_profiles=n,
+                              sweeps=[list(s) for s in sweeps])}
+
+    # regression pin: explicit batch_window=0/max_batch=1 must reproduce
+    # the default (per-txn) admission exactly
+    profs = workloads[0][1]
+    base = C.run_sim(profs, SystemConfig(kind="p4db"), sim_time=sim_time)
+    pinned = C.run_sim(profs, SystemConfig(kind="p4db"), sim_time=sim_time,
+                       batch_window=0.0, max_batch=1)
+    results["per_txn_pin"] = dict(
+        default_tput=base["throughput"], zeroed_tput=pinned["throughput"],
+        exact=base == pinned)
+    assert base == pinned, "batch_window=0/max_batch=1 must be per-txn"
+
+    for name, profs in workloads:
+        per, pts = C.sim_batch_compare(profs, sweeps, sim_time=sim_time)
+        wl = {"per_txn": dict(tput=per["throughput"],
+                              lat_us=per.get("lat_all", 0) * 1e6),
+              "batched": {}}
+        for mb, w, out in pts:
+            wl["batched"][f"mb{mb}_w{w:g}"] = dict(
+                tput=out["throughput"],
+                speedup_vs_per_txn=round(
+                    out["throughput"] / max(per["throughput"], 1), 3),
+                avg_batch=round(out["avg_batch"], 2),
+                switch_rounds=out["switch_rounds"],
+                lat_us=out.get("lat_all", 0) * 1e6)
+        best = max(wl["batched"].values(), key=lambda r: r["tput"])
+        wl["best_speedup"] = best["speedup_vs_per_txn"]
+        results[name] = wl
+        print(f"  sim {name:14s} per-txn {per['throughput']:>12,.0f} txn/s"
+              f"  best batched {best['tput']:>12,.0f} txn/s "
+              f"({best['speedup_vs_per_txn']}x, avg batch "
+              f"{best['avg_batch']})")
+
+    hl = results["ycsb_A_allhot"]["best_speedup"]
+    results["headline_allhot_speedup"] = hl
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    if hl < 1.0:
+        print(f"WARNING: all-hot batched sim speedup {hl}x < 1x")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="small smoke configuration for CI (~30 s)")
+    ap.add_argument("--sim-only", action="store_true",
+                    help="run only the timing-sim admission comparison")
+    ap.add_argument("--no-sim", action="store_true",
+                    help="skip the timing-sim admission comparison")
     ap.add_argument("--out", default="BENCH_batch.json")
+    ap.add_argument("--out-sim", default="BENCH_sim_batch.json")
     args = ap.parse_args()
+
+    if args.sim_only:
+        print("timing-sim batched admission benchmark")
+        sim_batch(args.fast, args.out_sim)
+        return
 
     n = 192 if args.fast else 512
     batch_sizes = (64, 256) if args.fast else (32, 64, 128, 256)
@@ -162,6 +233,10 @@ def main():
     hl = results["headline_ycsb_a_hot256"]
     if hl["speedup"] < 3.0:
         print(f"WARNING: headline speedup {hl['speedup']}x < 3x target")
+
+    if not args.no_sim:
+        print("timing-sim batched admission benchmark")
+        sim_batch(args.fast, args.out_sim)
 
 
 if __name__ == "__main__":

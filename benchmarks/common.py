@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 
 import numpy as np
 
@@ -19,9 +20,9 @@ WARMUP = 0.005
 
 
 def ycsb_profiles(variant="A", dist=0.2, hot_per_node=50, n=3000,
-                  layout="optimal", top_k=None, seed=0):
+                  layout="optimal", top_k=None, seed=0, p_hot=0.75):
     p = ycsb.YCSBParams(n_nodes=N_NODES, hot_per_node=hot_per_node,
-                        variant=variant, dist_frac=dist)
+                        variant=variant, dist_frac=dist, p_hot_txn=p_hot)
     rng = np.random.default_rng(seed)
     sample = ycsb.generate(rng, 4000, p)
     lf = random_layout if layout == "random" else None
@@ -62,7 +63,15 @@ def tpcc_profiles(warehouses=8, dist=0.2, n=3000, layout="optimal", seed=0):
 
 
 def run_sim(profiles, system: SystemConfig, workers=20, sim_time=SIM_TIME,
-            seed=0, timing=None):
+            seed=0, timing=None, batch_window=None, max_batch=None):
+    """Run the timing sim; ``batch_window``/``max_batch`` override the
+    switch-admission knobs on ``system`` when given (None = keep)."""
+    if batch_window is not None or max_batch is not None:
+        system = replace(
+            system,
+            batch_window=system.batch_window if batch_window is None
+            else batch_window,
+            max_batch=system.max_batch if max_batch is None else max_batch)
     cs = ClusterSim(profiles, N_NODES, workers, system,
                     timing=timing or Timing(), seed=seed,
                     sim_time=sim_time, warmup=WARMUP)
@@ -73,3 +82,38 @@ def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
     return out, time.time() - t0
+
+
+# ------------------------------------ batched switch-admission compare ----
+# shared by benchmarks/run.py::bench_sim_batch and
+# benchmarks/bench_batch.py::sim_batch so the CI smoke and the paper-figure
+# run can never desynchronize their sweep grids / workload sets
+
+SIM_BATCH_SWEEP_FAST = [(8, 5e-6), (32, 5e-6)]          # (max_batch, window)
+SIM_BATCH_SWEEP_FULL = [(8, 5e-6), (16, 5e-6), (32, 2e-6), (32, 5e-6),
+                        (64, 5e-6)]
+
+
+def sim_batch_workloads(fast=True, n=3000):
+    """(name, profiles) pairs for the admission comparison: YCSB A/B/C +
+    SmallBank + all-hot YCSB-A (fast: YCSB-A + all-hot only)."""
+    wl = [("ycsb_A", ycsb_profiles(variant="A", n=n)[0])]
+    if not fast:
+        wl += [("ycsb_B", ycsb_profiles(variant="B", n=n)[0]),
+               ("ycsb_C", ycsb_profiles(variant="C", n=n)[0]),
+               ("smallbank", smallbank_profiles(n=n)[0])]
+    wl.append(("ycsb_A_allhot",
+               ycsb_profiles(variant="A", n=n, p_hot=1.0)[0]))
+    return wl
+
+
+def sim_batch_compare(profiles, sweeps, sim_time=SIM_TIME):
+    """Per-txn p4db baseline plus each batched (max_batch, window) point.
+
+    Returns ``(per, rows)`` with rows = [(max_batch, window, out), ...]."""
+    per = run_sim(profiles, SystemConfig(kind="p4db"), sim_time=sim_time)
+    rows = [(mb, w, run_sim(profiles, SystemConfig(kind="p4db"),
+                            sim_time=sim_time, batch_window=w,
+                            max_batch=mb))
+            for mb, w in sweeps]
+    return per, rows

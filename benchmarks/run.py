@@ -287,6 +287,32 @@ def fig18_latency_and_optstack(fast=True):
     save_csv("fig18b_optstack", ["config", "tput", "speedup"], rows)
 
 
+def bench_sim_batch(fast=True):
+    """Batched vs per-txn switch admission in the timing sim (the batched
+    hot-path pipeline's amortized rtt_switch, ISSUE 2): YCSB A/B/C +
+    SmallBank + all-hot YCSB-A, p4db, per-txn (batch_window=0/max_batch=1)
+    against batched rounds."""
+    rows = []
+    sweeps = C.SIM_BATCH_SWEEP_FAST if fast else C.SIM_BATCH_SWEEP_FULL
+    for name, profs in C.sim_batch_workloads(fast=False):
+        per, pts = C.sim_batch_compare(profs, sweeps)
+        rows.append([name, 1, 0.0, per["throughput"], 1.0, 0,
+                     per.get("lat_all", 0) * 1e6])
+        best = per
+        for mb, w, out in pts:
+            sp = out["throughput"] / max(per["throughput"], 1)
+            rows.append([name, mb, w, out["throughput"], sp,
+                         out["avg_batch"], out.get("lat_all", 0) * 1e6])
+            if out["throughput"] > best["throughput"]:
+                best = out
+        emit(f"sim_batch_{name}", best.get("lat_all", 0) * 1e6,
+             f"best_batched_speedup="
+             f"{best['throughput'] / max(per['throughput'], 1):.2f}x")
+    save_csv("bench_sim_batch", ["workload", "max_batch", "window_s",
+                                 "tput", "speedup_vs_per_txn", "avg_batch",
+                                 "lat_us"], rows)
+
+
 def engine_micro():
     """Switch-engine execution modes on one batch (functional layer)."""
     import jax
@@ -328,6 +354,7 @@ def main() -> None:
     fig16_layout(fast)
     fig17_capacity(fast)
     fig18_latency_and_optstack(fast)
+    bench_sim_batch(fast)
     engine_micro()
     save_csv("summary", ["name", "us_per_call", "derived"], ROWS)
     print(f"# benchmarks done in {time.time() - t0:.0f}s "

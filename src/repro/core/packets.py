@@ -213,17 +213,25 @@ def scan_flags(p: Dict[str, np.ndarray]) -> Dict[str, bool]:
                 addp_unsafe=has_addp and addp_needs_serial(p))
 
 
-def addp_needs_serial(p: Dict[str, np.ndarray]) -> bool:
-    """True if any ADDP instruction's source slot executes at the same or a
-    later stage than the ADDP itself.  The staged engine forwards results
-    from *earlier* stages only (the single-pass property the declustered
-    layout guarantees); such a packet is multipass on real hardware and
-    must take the serial path here."""
+def addp_unsafe_rows(p: Dict[str, np.ndarray]) -> np.ndarray:
+    """Per-packet [B] bool mask: packet i carries an ADDP instruction whose
+    source slot executes at the same or a later stage.  The staged engine
+    forwards results from *earlier* stages only (the single-pass property
+    the declustered layout guarantees); such packets are multipass on real
+    hardware and must take the serial path here.  The batched DBMS hot
+    path splits its groups at these rows so safe runs stay vectorized."""
     op = np.asarray(p["op"])
-    if not (op == ADDP).any():
-        return False
     stage = np.asarray(p["stage"])
     K = op.shape[1]
     src = np.clip(np.asarray(p["operand"]), 0, K - 1)
     src_stage = np.take_along_axis(stage, src, axis=1)
-    return bool(((op == ADDP) & (src_stage >= stage)).any())
+    return ((op == ADDP) & (src_stage >= stage)).any(axis=1)
+
+
+def addp_needs_serial(p: Dict[str, np.ndarray]) -> bool:
+    """True if any packet in the batch is ADDP-unsafe (see
+    ``addp_unsafe_rows``)."""
+    op = np.asarray(p["op"])
+    if not (op == ADDP).any():
+        return False
+    return bool(addp_unsafe_rows(p).any())

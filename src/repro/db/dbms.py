@@ -25,8 +25,8 @@ import numpy as np
 from repro.core.engine import SwitchEngine, init_registers
 from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
-                                SwitchConfig, build_packets, empty_packets,
-                                mark_multipass, scan_flags)
+                                SwitchConfig, addp_unsafe_rows, build_packets,
+                                empty_packets, mark_multipass, scan_flags)
 from repro.db.txn import Txn, node_of
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
@@ -231,11 +231,36 @@ class Cluster:
 
     def _flush_hot_group(self, pending: List[Tuple[int, Txn]],
                          results: List[Optional[list]]):
-        """Commit all buffered hot txns in ONE switch dispatch."""
+        """Commit all buffered hot txns in as few switch dispatches as the
+        engine allows.  Under ``auto`` mode a single multipass-ADDP
+        ("unsafe") txn would demote the whole group to the serial engine
+        (``_resolve_mode``); instead the group is split at unsafe txns —
+        contiguous safe runs stay on the vectorized path, unsafe runs take
+        the serial path — with sub-groups dispatched in admission order,
+        so results, register state and GIDs are unchanged.  Explicit modes
+        keep the single-dispatch, validate-as-a-unit contract."""
         if not pending:
             return
+        pkts, meta = build_packets([t for _, t in pending], self.hot_index,
+                                   self.switch_cfg)
+        if self.switch_mode == "auto" and meta["addp_unsafe"] \
+                and len(pending) > 1:
+            unsafe = addp_unsafe_rows(pkts)
+            lo = 0
+            for hi in range(1, len(pending) + 1):
+                if hi == len(pending) or unsafe[hi] != unsafe[lo]:
+                    self._dispatch_hot_group(pending[lo:hi], results)
+                    lo = hi
+        else:
+            self._dispatch_hot_group(pending, results, prebuilt=(pkts, meta))
+        pending.clear()
+
+    def _dispatch_hot_group(self, pending: List[Tuple[int, Txn]],
+                            results: List[Optional[list]], prebuilt=None):
+        """Commit one contiguous run of hot txns in ONE switch dispatch."""
         group = [t for _, t in pending]
-        pkts, meta = build_packets(group, self.hot_index, self.switch_cfg)
+        pkts, meta = prebuilt or build_packets(group, self.hot_index,
+                                               self.switch_cfg)
         self._validate_mode(meta)
         for t in group:
             self.nodes[t.home].log("switch_send", t.tid,
@@ -255,7 +280,6 @@ class Cluster:
             for slot in range(n_ops):
                 out[order[b, slot]] = int(res[b, slot])
             results[i] = out
-        pending.clear()
 
     def _to_packet(self, txn: Txn):
         """Build the switch packet; dependency-free op lists are sorted by

@@ -6,6 +6,8 @@ heap.  Coroutines yield commands:
                                     (denied; NO_WAIT or WAIT_DIE died)
   ("acquire", Resource)          -> resumes when a slot is free
   ("release", Resource)
+  ("join", Batcher, item)        -> resumes when the item's batch has been
+                                    serviced (gather/barrier)
 
 Lock ownership is keyed by transaction timestamp (ts), so the model layer
 can release locks synchronously without generator identity."""
@@ -70,6 +72,72 @@ class Resource:
         self.queue: List[object] = []
 
 
+class Batcher:
+    """Gather/barrier primitive: member coroutines yield
+    ``("join", batcher, item)`` and are resumed together — in FIFO join
+    order — once their batch has been serviced.
+
+    The forming batch closes when ``max_batch`` members have joined, or
+    ``window`` seconds after its FIRST member joined, whichever comes
+    first.  ``window <= 0`` means greedy batching — no artificial gather
+    delay: a join while the service is idle dispatches immediately, and
+    joins arriving while a batch is in service accumulate and dispatch
+    together the moment the service frees up.  Closed batches are
+    serviced strictly FIFO, one at a time: ``service(items)`` runs as its
+    own coroutine (it may yield any Sim command), and when it returns,
+    every member of that batch resumes with the service's return value.
+    Backpressure is composed externally (e.g. a counted ``Resource``
+    bounding members in flight)."""
+
+    __slots__ = ("sim", "service", "window", "max_batch", "forming",
+                 "closed", "busy", "_epoch")
+
+    def __init__(self, sim: "Sim", service, window: float, max_batch: int):
+        self.sim = sim
+        self.service = service
+        self.window = window
+        self.max_batch = max(1, int(max_batch))
+        self.forming: List[Tuple[object, object]] = []   # [(gen, item)]
+        self.closed: List[List[Tuple[object, object]]] = []
+        self.busy = False
+        self._epoch = 0          # invalidates window timers of closed batches
+
+    def join(self, gen, item):
+        self.forming.append((gen, item))
+        if len(self.forming) >= self.max_batch or \
+                (self.window <= 0 and not self.busy):
+            self._close()
+        elif len(self.forming) == 1 and self.window > 0:
+            self.sim.spawn(self._timer(self._epoch))
+
+    def _timer(self, epoch):
+        yield ("delay", self.window)
+        if epoch == self._epoch and self.forming:
+            self._close()
+
+    def _close(self):
+        batch, self.forming = self.forming, []
+        self._epoch += 1
+        self.closed.append(batch)
+        self._pump()
+
+    def _pump(self):
+        if self.busy or not self.closed:
+            return
+        self.busy = True
+        self.sim.spawn(self._serve(self.closed.pop(0)))
+
+    def _serve(self, batch):
+        result = yield from self.service([item for _, item in batch])
+        for gen, _ in batch:                 # FIFO: heap seq preserves order
+            self.sim._resume(gen, result)
+        self.busy = False
+        if self.window <= 0 and self.forming and not self.closed:
+            self._close()                    # greedy: take what accumulated
+        else:
+            self._pump()
+
+
 class Sim:
     def __init__(self):
         self.now = 0.0
@@ -118,10 +186,15 @@ class Sim:
         elif kind == "release":
             res = cmd[1]
             if res.queue:
+                # slot handoff: the freed slot passes straight to the head
+                # waiter, so `used` stays constant (and <= capacity)
                 g = res.queue.pop(0)
                 self._resume(g, True)
             else:
                 res.used -= 1
             self._resume(gen, None)
+        elif kind == "join":
+            _, batcher, item = cmd
+            batcher.join(gen, item)
         else:
             raise ValueError(cmd)

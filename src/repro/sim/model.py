@@ -4,6 +4,28 @@ contention, switch pipeline-lock queueing and abort/retry dynamics.
 
 Key latency asymmetry (the paper's core argument): the switch is reachable
 in HALF the node-to-node latency, and in-switch txns take no locks at all.
+
+Batched switch admission (``SystemConfig.batch_window`` / ``max_batch``)
+------------------------------------------------------------------------
+The functional hot path (``Cluster.run_batch``) commits whole groups of
+hot transactions in ONE switch dispatch; this layer models the matching
+admission discipline.  With batching enabled, a p4db worker no longer
+performs a synchronous switch round per hot txn.  Instead each node runs
+a switch-batcher (a DES ``Batcher``): hot txns arriving within
+``batch_window`` seconds — or until ``max_batch`` have gathered, or,
+with ``batch_window=0``, greedily while the previous round is in
+flight — are dispatched as ONE switch round that pays a single
+``rtt_switch``, a
+per-txn ``t_pipe`` occupancy, and ONE pipeline-lock acquisition covering
+the summed recirculation occupancy of its multipass members.  All members
+resume (commit, record latency) when the round returns.  Because hot txns
+are abort-free and commit-on-send (§6.1), the admitting worker does not
+block on the round: it hands the txn to the batcher and continues, with a
+per-node credit pool (2 x ``max_batch`` outstanding hot txns) providing
+closed-loop backpressure.  Per-txn admission — ``batch_window=0`` and
+``max_batch=1``, the defaults — keeps the original synchronous path,
+event-for-event.  Warm txns' switch sub-txns stay synchronous in either
+mode: their round happens while the cold part's locks are held.
 """
 from __future__ import annotations
 
@@ -14,7 +36,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.layout import trace_reorderable
-from repro.sim.des import Resource, Sim, SimLock
+from repro.sim.des import Batcher, Resource, Sim, SimLock
 
 
 @dataclass
@@ -42,6 +64,11 @@ class SystemConfig:
                                       # retried forever (paper Fig 12 counts
                                       # committed txns; hot txns under
                                       # No-Switch mostly abort)
+    batch_window: float = 0.0         # switch-batcher gather window (s);
+                                      # 0 with max_batch=1 = per-txn rounds,
+                                      # 0 with max_batch>1 = greedy (batch
+                                      # = arrivals during in-flight round)
+    max_batch: int = 1                # hot txns per switch round (p4db)
 
 
 @dataclass
@@ -108,6 +135,13 @@ class ClusterSim:
         self.lat_n = collections.Counter()
         self.breakdown = collections.Counter()   # phase -> summed seconds
         self._ts = 0
+        # batched switch admission (see module docstring): per-txn rounds
+        # when batch_window=0 and max_batch=1 — the exact original path
+        self.batching = system.kind == "p4db" and \
+            (system.max_batch > 1 or system.batch_window > 0)
+        self.hot_credits = 2 * max(1, system.max_batch)
+        self.rounds = 0                          # batched switch rounds
+        self.round_txns = 0                      # hot txns they carried
 
     def _charge(self, phase, dt):
         if getattr(self, "sim", None) is not None and \
@@ -131,6 +165,14 @@ class ClusterSim:
             self._ts += 1
             ts = self._ts
             yield ("delay", T.t_client)
+            if self.batching and prof.klass == "hot":
+                # async hand-off to the node's switch-batcher: hot txns
+                # are abort-free and commit-on-send, so the worker admits
+                # the next txn while the round is in flight; the credit
+                # pool bounds outstanding hot txns (closed-loop)
+                yield ("acquire", self.credits[node])
+                sim.spawn(self.hot_member(node, prof, t0))
+                continue
             committed = yield from self.run_txn(prof, ts)
             attempt = 1
             while not committed:
@@ -188,6 +230,49 @@ class ClusterSim:
             yield ("delay", self.T.t_commit_local)   # log flush, locks held
         self.release_all(prof, ts, include_hot=True)
         return True
+
+    # ------------------------------------------------ batched admission --
+    def hot_member(self, node: int, prof: TxnProfile, t0: float):
+        """One hot txn's life under batched admission: join the node's
+        switch-batcher, resume when its round returns, commit."""
+        yield ("join", self.batchers[node], (prof, self.sim.now))
+        if self.sim.now >= self.warmup:
+            self.commits[prof.klass] += 1
+            self.commits["total"] += 1
+            self.commits[prof.kind] += 1
+            dt = self.sim.now - t0
+            self.lat_sum[prof.klass] += dt
+            self.lat_n[prof.klass] += 1
+            self.lat_sum["all"] += dt
+            self.lat_n["all"] += 1
+        yield ("release", self.credits[node])
+
+    def _switch_round(self, items):
+        """Service one batch: a single switch round (one ``rtt_switch``)
+        carrying every member; pipeline occupancy is per-txn ``t_pipe``
+        plus the summed recirculations of multipass members under ONE
+        pipeline-lock hold."""
+        T = self.T
+        t_start = self.sim.now
+        for _, t_join in items:
+            self._charge("batch_wait", t_start - t_join)
+        self._charge("switch", T.rtt_switch)
+        yield ("delay", T.rtt_switch / 2)
+        base = T.t_pipe * len(items)
+        rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
+        extra = sum((p.passes - 1) * rc for p, _ in items if p.passes > 1)
+        if extra:
+            t0 = self.sim.now
+            yield ("acquire", self.pipe)
+            self._charge("pipe_lock_wait", self.sim.now - t0)
+            self._charge("recirc", extra)
+            yield ("delay", base + extra)
+            yield ("release", self.pipe)
+        else:
+            yield ("delay", base)
+        yield ("delay", T.rtt_switch / 2)
+        self.rounds += 1
+        self.round_txns += len(items)
 
     def switch_txn(self, prof: TxnProfile):
         T = self.T
@@ -259,6 +344,11 @@ class ClusterSim:
     # --------------------------------------------------------------- run --
     def run(self):
         self.sim = Sim()
+        self.batchers = [Batcher(self.sim, self._switch_round,
+                                 self.sys.batch_window, self.sys.max_batch)
+                         for _ in range(self.n_nodes)]
+        self.credits = [Resource(self.hot_credits)
+                        for _ in range(self.n_nodes)]
         for node in range(self.n_nodes):
             for w in range(self.wpn):
                 g = self.worker(node)
@@ -268,7 +358,10 @@ class ClusterSim:
         tput = self.commits["total"] / window
         out = dict(throughput=tput,
                    commits=dict(self.commits), aborts=dict(self.aborts),
-                   breakdown=dict(self.breakdown))
+                   breakdown=dict(self.breakdown),
+                   switch_rounds=self.rounds,
+                   avg_batch=self.round_txns / self.rounds
+                   if self.rounds else 0.0)
         for k in self.lat_n:
             out[f"lat_{k}"] = self.lat_sum[k] / max(self.lat_n[k], 1)
         return out

@@ -172,6 +172,82 @@ def test_one_dispatch_per_hot_group():
     assert c2.switch.dispatch_count == 256
 
 
+def _interleaved_unsafe(arrangement):
+    """Hot txns from an 'S'(safe)/'U'(multipass-ADDP) pattern, all on one
+    node.  The unsafe txn reads a stage-1 tuple and ADDPs it into a
+    stage-0 tuple — the same-or-later-stage source that forces the serial
+    engine."""
+    from repro.core.hotset import HotIndex
+    from repro.core.layout import Placement
+    from repro.core.packets import ADD, READ
+    from repro.db.txn import Txn, key_of
+    A, B, C_ = key_of(0, 0), key_of(0, 1), key_of(0, 2)
+    hi = HotIndex(Placement(slot={A: (0, 0), B: (1, 0), C_: (2, 0)}))
+    txns = []
+    for i, ch in enumerate(arrangement):
+        if ch == "S":
+            txns.append(Txn("safe", [(ADD, A, i + 1), (ADD, B, 2 * i + 1),
+                                     (READ, C_, 0)], 0))
+        else:
+            txns.append(Txn("unsafe", [(READ, B, 0), (ADDP, A, 0)], 0))
+    loads = [(A, 7), (B, 11), (C_, 13)]
+    return txns, hi, loads
+
+
+@pytest.mark.parametrize("mode", ["auto", "serial"])
+@pytest.mark.parametrize("arrangement",
+                         ["USSU", "SSUSS", "USSUSSSU", "UUSSU"])
+def test_group_split_equals_per_txn(arrangement, mode):
+    """A hot group with multipass-ADDP txns at head/middle/tail matches the
+    per-txn loop exactly — results, registers, GIDs, WAL recovery — in
+    every mode that can run such packets (auto splits; serial runs the
+    whole group)."""
+    txns, hi, loads = _interleaved_unsafe(arrangement)
+    _assert_equivalent(txns, hi, loads, n_nodes=1, mode=mode,
+                       batch_size=len(txns))
+
+
+def test_group_split_keeps_safe_runs_vectorized():
+    """Under auto mode the batch splits at unsafe txns: one dispatch per
+    contiguous run (not per txn), safe runs on the vectorized affine
+    engine, unsafe runs on the serial oracle."""
+    arrangement = "USSUSSSU"                       # runs: U|SS|U|SSS|U
+    txns, hi, loads = _interleaved_unsafe(arrangement)
+    c = _make_cluster(hi, loads, 1, "auto")
+    modes = []
+    orig = c.switch.execute_batch
+
+    def spy(pkts, meta=None, mode="auto"):
+        from repro.core.packets import scan_flags
+        m = meta if meta is not None else scan_flags(pkts)
+        modes.append(SwitchEngine._resolve_mode(
+            mode, m["has_cadd"], m["has_addp"], m["addp_unsafe"]))
+        return orig(pkts, meta, mode)
+
+    c.switch.execute_batch = spy
+    res = c.run_batch(txns)
+    assert all(r is not None for r in res)
+    assert c.switch.dispatch_count == 5            # runs, not 8 txns
+    assert modes == ["serial", "affine", "serial", "affine", "serial"]
+    # per-txn world pays one dispatch per txn
+    c2 = _make_cluster(hi, loads, 1, "auto")
+    for t in _interleaved_unsafe(arrangement)[0]:
+        c2.run(t)
+    assert c2.switch.dispatch_count == len(arrangement)
+
+
+@pytest.mark.parametrize("mode", ["affine", "staged", "pallas"])
+def test_group_with_unsafe_rejected_as_unit_under_explicit_mode(mode):
+    """Explicit modes that cannot run multipass ADDP reject the whole
+    group before any switch_send is logged."""
+    txns, hi, loads = _interleaved_unsafe("SSU")
+    c = _make_cluster(hi, loads, 1, mode)
+    with pytest.raises(ValueError):
+        c.run_batch(txns)
+    assert not any(e.kind in ("switch_send", "switch_result")
+                   for e in c.nodes[0].wal)
+
+
 def test_rejected_mode_fails_before_side_effects():
     """An explicit switch_mode the hot sub-txn cannot run under must fail
     before the warm txn's cold part takes locks or applies writes — and

@@ -1,0 +1,64 @@
+"""Property test (via the hypothesis shim): the timing layer's pass
+counting (``profile_txn``) must agree with the engine's batched
+recirculation metadata (``build_packets`` / ``mark_multipass_batch``) on
+random op traces — the sim charges exactly the recirculations the
+functional switch would perform."""
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.core.hotset import HotIndex
+from repro.core.layout import Placement
+from repro.core.packets import (ADD, ADDP, CADD, READ, WRITE, SwitchConfig,
+                                build_packets, mark_multipass,
+                                split_passes)
+from repro.db.txn import Txn, key_of
+from repro.sim.model import profile_txn
+
+CFG = SwitchConfig(n_stages=5, regs_per_stage=4, max_instrs=8)
+# every key hot, several keys per stage so random traces hit stage ties,
+# repeats, and non-monotone sequences
+KEYS = [key_of(0, i) for i in range(CFG.n_stages * 3)]
+HI = HotIndex(Placement(slot={k: (i % CFG.n_stages, i // CFG.n_stages)
+                              for i, k in enumerate(KEYS)}))
+
+
+def random_txn(rng, n_ops):
+    ops = []
+    for i in range(n_ops):
+        k = KEYS[int(rng.integers(len(KEYS)))]
+        o = int(rng.choice([READ, WRITE, ADD, CADD]))
+        v = int(rng.integers(0, 50))
+        if i > 0 and rng.random() < 0.25:
+            o, v = ADDP, int(rng.integers(0, i))   # source = earlier op
+        ops.append((o, k, v))
+    return Txn("prop", ops, 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+def test_profile_passes_match_packet_recircs(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    txns = [random_txn(rng, n_ops) for _ in range(6)]
+    profs = [profile_txn(t, HI, 0) for t in txns]
+    pkts, meta = build_packets(txns, HI, CFG)
+    for b, prof in enumerate(profs):
+        assert prof.klass == "hot"
+        assert prof.passes == int(pkts["nb_recircs"][b]) + 1, txns[b].ops
+        assert (prof.passes > 1) == bool(pkts["is_multipass"][b])
+        # and both agree with the greedy pass decomposition the engine's
+        # recirculation model is defined by
+        assert prof.passes == len(split_passes(pkts, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_batch_recircs_match_per_packet_marker(seed):
+    """The vectorized marker equals the per-packet reference marker."""
+    rng = np.random.default_rng(seed)
+    txns = [random_txn(rng, int(rng.integers(1, CFG.max_instrs + 1)))
+            for _ in range(8)]
+    pkts, meta = build_packets(txns, HI, CFG)
+    ref = {k: v.copy() for k, v in pkts.items()}
+    mark_multipass(ref)
+    np.testing.assert_array_equal(ref["nb_recircs"], pkts["nb_recircs"])
+    np.testing.assert_array_equal(ref["is_multipass"], pkts["is_multipass"])

@@ -1,0 +1,68 @@
+"""Batched switch-admission sanity in the timing simulator: amortizing
+``rtt_switch`` over grouped hot txns must pay off on an all-hot workload,
+the zeroed knobs must reproduce the per-txn model exactly (regression
+pin), and the model must stay deterministic and conservation-consistent."""
+import pytest
+
+from benchmarks import common as C
+from repro.sim.model import SystemConfig
+
+BATCHED = dict(batch_window=5e-6, max_batch=32)
+
+
+@pytest.fixture(scope="module")
+def allhot_a():
+    return C.ycsb_profiles(variant="A", n=1500, p_hot=1.0)[0]
+
+
+def test_batched_beats_per_txn_on_allhot(allhot_a):
+    per = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.015)
+    bat = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.015,
+                    **BATCHED)
+    assert bat["throughput"] >= per["throughput"]
+    # and measurably so (acceptance: recorded in BENCH_sim_batch.json)
+    assert bat["throughput"] >= 1.2 * per["throughput"]
+    assert bat["switch_rounds"] > 0
+    assert bat["avg_batch"] > 4          # rounds genuinely amortize the rtt
+
+
+def test_zero_knobs_reproduce_per_txn_exactly(allhot_a):
+    """Regression pin: batch_window=0/max_batch=1 IS the per-txn model —
+    identical event schedule, identical numbers, no batched rounds."""
+    a = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.01,
+                  seed=3)
+    b = C.run_sim(allhot_a, SystemConfig(kind="p4db", batch_window=0.0,
+                                         max_batch=1),
+                  sim_time=0.01, seed=3)
+    assert a == b
+    assert a["switch_rounds"] == 0 and a["avg_batch"] == 0.0
+
+
+def test_batched_sim_deterministic_across_identical_seeds(allhot_a):
+    cfg = SystemConfig(kind="p4db", **BATCHED)
+    a = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=5)
+    b = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=5)
+    assert a == b
+
+
+def test_hot_txns_never_abort_batched(allhot_a):
+    out = C.run_sim(allhot_a, SystemConfig(kind="p4db", **BATCHED),
+                    sim_time=0.01)
+    assert out["aborts"].get("hot", 0) == 0
+    assert out["commits"]["hot"] == out["commits"]["total"]
+
+
+def test_breakdown_phases_bounded_after_warmup():
+    """Charged phase time is bounded by aggregate busy time: workers +
+    outstanding hot-txn credits + the (per-node serialized) switch rounds
+    and pipeline waits.  Holds in both admission modes on a mixed mix."""
+    profs = C.ycsb_profiles(variant="A", n=1500)[0]
+    wpn, sim_time = 20, 0.01
+    window = sim_time - C.WARMUP
+    for kw in ({}, dict(BATCHED)):
+        out = C.run_sim(profs, SystemConfig(kind="p4db"), workers=wpn,
+                        sim_time=sim_time, **kw)
+        credits = 2 * kw.get("max_batch", 1)
+        bound = (wpn + credits + 3) * C.N_NODES * window
+        total = sum(out["breakdown"].values())
+        assert 0 < total <= bound

@@ -12,10 +12,17 @@ matching batched switch-admission model: per-txn rounds
 (batch_window=0/max_batch=1, pinned to reproduce the defaults exactly)
 against batched rounds across YCSB A/B/C + SmallBank + all-hot YCSB-A.
 
-  PYTHONPATH=src python benchmarks/bench_batch.py \\
-      [--fast] [--sim-only] [--out FILE] [--out-sim FILE]
+A third section sweeps PIPELINED switch rounds (``pipeline_depth`` x
+``max_batch``, with and without explicit 10G NIC serialization): depth=1
+is the serialized PR 2 model, depth>1 overlaps round k+1's assembly with
+round k's flight and records the crossover batch size where batched
+admission starts beating 20 synchronous workers.
 
-Emits BENCH_batch.json and BENCH_sim_batch.json.
+  PYTHONPATH=src python benchmarks/bench_batch.py \\
+      [--fast] [--sim-only] [--pipeline-only] [--no-sim] \\
+      [--out FILE] [--out-sim FILE] [--out-sim-pipeline FILE]
+
+Emits BENCH_batch.json, BENCH_sim_batch.json and BENCH_sim_pipeline.json.
 """
 from __future__ import annotations
 
@@ -192,18 +199,114 @@ def sim_batch(fast: bool, out_path: str):
         print(f"WARNING: all-hot batched sim speedup {hl}x < 1x")
 
 
+def sim_pipeline(fast: bool, out_path: str):
+    """Timing-sim pipelined switch rounds: depth x batch-size sweep."""
+    from benchmarks import common as C
+    from repro.sim.model import SystemConfig
+
+    sim_time = 0.01 if fast else C.SIM_TIME
+    n = 1000 if fast else 3000
+    depths = C.SIM_PIPELINE_DEPTHS_FAST if fast \
+        else C.SIM_PIPELINE_DEPTHS_FULL
+    batches = C.SIM_PIPELINE_BATCHES_FAST if fast \
+        else C.SIM_PIPELINE_BATCHES_FULL
+    workloads = C.sim_pipeline_workloads(fast, n=n)
+
+    results = {"config": dict(fast=fast, sim_time=sim_time, n_profiles=n,
+                              depths=depths, batches=batches,
+                              window=C.SIM_PIPELINE_WINDOW,
+                              nic_line_rate=C.NIC_10G)}
+
+    # depth=1 vs the PR 2 golden fixture (generated from the PR 2 code
+    # BEFORE the pipelined refactor), recorded for the artifact reader.
+    # The equivalence CONTRACT is owned by the test suite
+    # (tests/test_sim_pipeline.py::test_depth1_pins_to_pr2_batched_trace);
+    # here a mismatch or missing fixture only warns.
+    golden_path = os.path.join(os.path.dirname(__file__), "..", "tests",
+                               "data", "golden_sim_pr2.json")
+    try:
+        with open(golden_path) as f:
+            pr2 = json.load(f)["allhot_batched_mb32_w5us"]
+        gprofs = C.ycsb_profiles(variant="A", n=1500, p_hot=1.0)[0]
+        d1 = C.run_sim(gprofs, SystemConfig(kind="p4db"), sim_time=0.01,
+                       seed=3, batch_window=5e-6, max_batch=32,
+                       pipeline_depth=1)
+        results["depth1_pin"] = dict(pr2_tput=pr2["throughput"],
+                                     depth1_tput=d1["throughput"],
+                                     exact=pr2 == d1)
+        if pr2 != d1:
+            print("WARNING: depth=1 no longer matches the PR 2 golden "
+                  "fixture (run the test suite for the real pin)")
+    except (FileNotFoundError, KeyError, json.JSONDecodeError):
+        results["depth1_pin"] = None
+
+    for name, profs in workloads:
+        wl = {}
+        for label, nic in (("no_nic", None), ("nic_10g", C.NIC_10G)):
+            per, rows = C.sim_pipeline_compare(
+                profs, depths, batches, sim_time=sim_time,
+                nic_line_rate=nic)
+            sec = {"per_txn": dict(tput=per["throughput"],
+                                   lat_us=per.get("lat_all", 0) * 1e6),
+                   "grid": {}}
+            for d, mb, out in rows:
+                sec["grid"][f"d{d}_mb{mb}"] = dict(
+                    tput=out["throughput"],
+                    speedup_vs_per_txn=round(
+                        out["throughput"] / max(per["throughput"], 1), 3),
+                    avg_batch=round(out["avg_batch"], 2),
+                    switch_rounds=out["switch_rounds"],
+                    lat_us=out.get("lat_all", 0) * 1e6)
+            sec["crossover_batch_by_depth"] = {
+                str(d): mb for d, mb in
+                C.pipeline_crossover(per, rows).items()}
+            d1_best = max((r["throughput"] for d, _, r in rows if d == 1),
+                          default=0)
+            deep_best = max((r["throughput"] for d, _, r in rows if d > 1),
+                            default=0)
+            sec["depth1_ceiling_tput"] = d1_best
+            sec["best_pipelined_tput"] = deep_best
+            sec["pipelined_vs_depth1"] = round(
+                deep_best / max(d1_best, 1), 3)
+            wl[label] = sec
+            print(f"  sim {name:14s} [{label:7s}] per-txn "
+                  f"{per['throughput']:>12,.0f} txn/s  depth1 ceiling "
+                  f"{d1_best:>12,.0f}  best pipelined {deep_best:>12,.0f} "
+                  f"({sec['pipelined_vs_depth1']}x)  crossover "
+                  f"{sec['crossover_batch_by_depth']}")
+        results[name] = wl
+
+    hl = results["ycsb_A_allhot"]["no_nic"]
+    results["headline_pipelined_vs_depth1"] = hl["pipelined_vs_depth1"]
+    results["headline_pipelined_speedup"] = round(
+        hl["best_pipelined_tput"] / max(hl["per_txn"]["tput"], 1), 3)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    if results["headline_pipelined_vs_depth1"] <= 1.0:
+        print("WARNING: pipelined rounds did not beat the depth-1 ceiling")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="small smoke configuration for CI (~30 s)")
     ap.add_argument("--sim-only", action="store_true",
-                    help="run only the timing-sim admission comparison")
+                    help="run only the timing-sim batched-admission "
+                         "comparison")
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="run only the pipelined-round timing-sim sweep")
     ap.add_argument("--no-sim", action="store_true",
-                    help="skip the timing-sim admission comparison")
+                    help="skip the timing-sim comparisons")
     ap.add_argument("--out", default="BENCH_batch.json")
     ap.add_argument("--out-sim", default="BENCH_sim_batch.json")
+    ap.add_argument("--out-sim-pipeline", default="BENCH_sim_pipeline.json")
     args = ap.parse_args()
 
+    if args.pipeline_only:
+        print("timing-sim pipelined switch-round benchmark")
+        sim_pipeline(args.fast, args.out_sim_pipeline)
+        return
     if args.sim_only:
         print("timing-sim batched admission benchmark")
         sim_batch(args.fast, args.out_sim)
@@ -237,6 +340,8 @@ def main():
     if not args.no_sim:
         print("timing-sim batched admission benchmark")
         sim_batch(args.fast, args.out_sim)
+        print("timing-sim pipelined switch-round benchmark")
+        sim_pipeline(args.fast, args.out_sim_pipeline)
 
 
 if __name__ == "__main__":

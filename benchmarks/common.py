@@ -63,15 +63,17 @@ def tpcc_profiles(warehouses=8, dist=0.2, n=3000, layout="optimal", seed=0):
 
 
 def run_sim(profiles, system: SystemConfig, workers=20, sim_time=SIM_TIME,
-            seed=0, timing=None, batch_window=None, max_batch=None):
-    """Run the timing sim; ``batch_window``/``max_batch`` override the
-    switch-admission knobs on ``system`` when given (None = keep)."""
-    if batch_window is not None or max_batch is not None:
-        system = replace(
-            system,
-            batch_window=system.batch_window if batch_window is None
-            else batch_window,
-            max_batch=system.max_batch if max_batch is None else max_batch)
+            seed=0, timing=None, batch_window=None, max_batch=None,
+            pipeline_depth=None, nic_line_rate=None):
+    """Run the timing sim; ``batch_window``/``max_batch``/
+    ``pipeline_depth``/``nic_line_rate`` override the switch-admission
+    knobs on ``system`` when given (None = keep)."""
+    overrides = {k: v for k, v in dict(
+        batch_window=batch_window, max_batch=max_batch,
+        pipeline_depth=pipeline_depth, nic_line_rate=nic_line_rate).items()
+        if v is not None}
+    if overrides:
+        system = replace(system, **overrides)
     cs = ClusterSim(profiles, N_NODES, workers, system,
                     timing=timing or Timing(), seed=seed,
                     sim_time=sim_time, warmup=WARMUP)
@@ -117,3 +119,53 @@ def sim_batch_compare(profiles, sweeps, sim_time=SIM_TIME):
                             max_batch=mb))
             for mb, w in sweeps]
     return per, rows
+
+
+# ----------------------------------- pipelined switch-round sweep ---------
+# shared by benchmarks/run.py::bench_sim_pipeline and
+# benchmarks/bench_batch.py::sim_pipeline (BENCH_sim_pipeline.json): a
+# depth x batch-size grid at the PR 2 gather window, locating the
+# crossover batch size where batched admission starts beating per-txn
+
+SIM_PIPELINE_WINDOW = 5e-6                       # PR 2's gather window
+SIM_PIPELINE_DEPTHS_FAST = [1, 4]
+SIM_PIPELINE_DEPTHS_FULL = [1, 2, 4, 8]
+SIM_PIPELINE_BATCHES_FAST = [4, 32]
+SIM_PIPELINE_BATCHES_FULL = [2, 4, 8, 16, 32]
+NIC_10G = 1.25e9                                 # paper setup: 10G NICs
+
+
+def sim_pipeline_workloads(fast=True, n=3000):
+    """(name, profiles) pairs for the pipelined-round sweep: all-hot
+    YCSB-A (the ceiling measurement) plus the standard YCSB-A mix."""
+    wl = [("ycsb_A_allhot", ycsb_profiles(variant="A", n=n, p_hot=1.0)[0])]
+    if not fast:
+        wl.append(("ycsb_A", ycsb_profiles(variant="A", n=n)[0]))
+    return wl
+
+
+def sim_pipeline_compare(profiles, depths, batches, sim_time=SIM_TIME,
+                         window=SIM_PIPELINE_WINDOW, nic_line_rate=None):
+    """Per-txn p4db baseline plus each (depth, max_batch) grid point.
+
+    Returns ``(per, rows)`` with rows = [(depth, max_batch, out), ...].
+    ``nic_line_rate`` (when given) applies to the baseline AND the grid,
+    so speedups stay apples-to-apples under explicit NIC serialization."""
+    nic = dict(nic_line_rate=nic_line_rate) if nic_line_rate else {}
+    per = run_sim(profiles, SystemConfig(kind="p4db"), sim_time=sim_time,
+                  **nic)
+    rows = [(d, mb, run_sim(profiles, SystemConfig(kind="p4db"),
+                            sim_time=sim_time, batch_window=window,
+                            max_batch=mb, pipeline_depth=d, **nic))
+            for d in depths for mb in batches]
+    return per, rows
+
+
+def pipeline_crossover(per, rows):
+    """Per depth, the smallest max_batch whose throughput beats the
+    per-txn baseline (None = no batch size wins at that depth)."""
+    out = {}
+    for d, mb, r in sorted(rows, key=lambda x: (x[0], x[1])):
+        if d not in out and r["throughput"] > per["throughput"]:
+            out[d] = mb
+    return {d: out.get(d) for d in sorted({d for d, _, _ in rows})}

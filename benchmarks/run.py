@@ -313,6 +313,43 @@ def bench_sim_batch(fast=True):
                                  "lat_us"], rows)
 
 
+def bench_sim_pipeline(fast=True):
+    """Pipelined switch rounds in the timing sim (ISSUE 3): depth x
+    batch-size grid over all-hot YCSB-A (+ the standard mix when full),
+    with and without explicit 10G NIC serialization.  depth=1 is the PR 2
+    serialized model; the crossover column records the smallest batch
+    size beating the per-txn baseline at each depth."""
+    rows = []
+    depths = C.SIM_PIPELINE_DEPTHS_FAST if fast \
+        else C.SIM_PIPELINE_DEPTHS_FULL
+    batches = C.SIM_PIPELINE_BATCHES_FAST if fast \
+        else C.SIM_PIPELINE_BATCHES_FULL
+    for name, profs in C.sim_pipeline_workloads(fast=fast):
+        for label, nic in (("no_nic", None), ("nic_10g", C.NIC_10G)):
+            per, pts = C.sim_pipeline_compare(profs, depths, batches,
+                                              nic_line_rate=nic)
+            cross = C.pipeline_crossover(per, pts)
+            rows.append([name, label, 0, 1, per["throughput"], 1.0, 0,
+                         per.get("lat_all", 0) * 1e6, ""])
+            best = per
+            for d, mb, out in pts:
+                sp = out["throughput"] / max(per["throughput"], 1)
+                rows.append([name, label, d, mb, out["throughput"], sp,
+                             out["avg_batch"],
+                             out.get("lat_all", 0) * 1e6, cross.get(d)])
+                if out["throughput"] > best["throughput"]:
+                    best = out
+            emit(f"sim_pipeline_{name}_{label}",
+                 best.get("lat_all", 0) * 1e6,
+                 f"best_speedup="
+                 f"{best['throughput'] / max(per['throughput'], 1):.2f}x "
+                 f"crossover={ {d: cross.get(d) for d in depths} }")
+    save_csv("bench_sim_pipeline",
+             ["workload", "nic", "depth", "max_batch", "tput",
+              "speedup_vs_per_txn", "avg_batch", "lat_us",
+              "crossover_batch"], rows)
+
+
 def engine_micro():
     """Switch-engine execution modes on one batch (functional layer)."""
     import jax
@@ -344,7 +381,15 @@ def engine_micro():
 
 
 def main() -> None:
-    fast = "--full" not in sys.argv
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="P4DB paper-figure benchmark harness; see module "
+                    "docstring for the figure list.  Writes per-point "
+                    "CSVs to artifacts/bench/.")
+    ap.add_argument("--full", action="store_true",
+                    help="full sweep grids (default: fast subsets)")
+    args = ap.parse_args()
+    fast = not args.full
     t0 = time.time()
     fig11_ycsb(fast)
     fig12_breakdown()
@@ -355,6 +400,7 @@ def main() -> None:
     fig17_capacity(fast)
     fig18_latency_and_optstack(fast)
     bench_sim_batch(fast)
+    bench_sim_pipeline(fast)
     engine_micro()
     save_csv("summary", ["name", "us_per_call", "derived"], ROWS)
     print(f"# benchmarks done in {time.time() - t0:.0f}s "

@@ -6,6 +6,15 @@ benchmarks; contention timing lives in repro.sim.  Pieces:
   * per-node in-memory store + 2PL lock table (NO_WAIT / WAIT_DIE),
   * 2PC for distributed cold parts,
   * hot / cold / warm classification through the replicated hot index,
+  * per-txn hot path (``run``): one switch dispatch per hot txn, and the
+    BATCHED hot path (``run_batch``): consecutive hot txns are grouped
+    into ONE vectorized ``SwitchEngine.execute_batch`` dispatch —
+    observationally identical to the per-txn loop (results, registers,
+    GIDs, WAL recovery; proven in tests/test_batch.py), with groups
+    split at multipass-ADDP ("unsafe") txns so safe runs stay on the
+    vectorized engines (``_flush_hot_group``); the timing-sim analogue
+    of this admission discipline (batched + pipelined switch rounds)
+    lives in repro.sim.model,
   * warm protocol: cold sub-txn made abort-proof (locks acquired, constraints
     checked) BEFORE the switch sub-txn is sent; switch sub-txns count as
     committed on send (they cannot abort),

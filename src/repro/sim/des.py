@@ -80,32 +80,39 @@ class Batcher:
     The forming batch closes when ``max_batch`` members have joined, or
     ``window`` seconds after its FIRST member joined, whichever comes
     first.  ``window <= 0`` means greedy batching — no artificial gather
-    delay: a join while the service is idle dispatches immediately, and
-    joins arriving while a batch is in service accumulate and dispatch
-    together the moment the service frees up.  Closed batches are
-    serviced strictly FIFO, one at a time: ``service(items)`` runs as its
-    own coroutine (it may yield any Sim command), and when it returns,
-    every member of that batch resumes with the service's return value.
-    Backpressure is composed externally (e.g. a counted ``Resource``
-    bounding members in flight)."""
+    delay: a join while a service slot is free dispatches immediately, and
+    joins arriving while every slot is occupied accumulate and dispatch
+    together the moment a slot frees up.  Closed batches are serviced in
+    FIFO close order with up to ``depth`` batches in service concurrently
+    (the pipelined discipline: the dispatcher assembles round k+1 while
+    round k is still in flight).  ``depth=1`` — the default — serializes
+    service exactly like the pre-pipelined Batcher, event for event.
+    ``service(items)`` runs as its own coroutine (it may yield any Sim
+    command), and when it returns, every member of that batch resumes
+    with the service's return value.  With ``depth > 1`` a shorter round
+    may overtake a longer in-flight one; members of one batch still
+    resume together, in join order.  Backpressure is composed externally
+    (e.g. a counted ``Resource`` bounding members in flight)."""
 
-    __slots__ = ("sim", "service", "window", "max_batch", "forming",
-                 "closed", "busy", "_epoch")
+    __slots__ = ("sim", "service", "window", "max_batch", "depth",
+                 "forming", "closed", "in_service", "_epoch")
 
-    def __init__(self, sim: "Sim", service, window: float, max_batch: int):
+    def __init__(self, sim: "Sim", service, window: float, max_batch: int,
+                 depth: int = 1):
         self.sim = sim
         self.service = service
         self.window = window
         self.max_batch = max(1, int(max_batch))
+        self.depth = max(1, int(depth))
         self.forming: List[Tuple[object, object]] = []   # [(gen, item)]
         self.closed: List[List[Tuple[object, object]]] = []
-        self.busy = False
+        self.in_service = 0      # batches currently in flight (<= depth)
         self._epoch = 0          # invalidates window timers of closed batches
 
     def join(self, gen, item):
         self.forming.append((gen, item))
         if len(self.forming) >= self.max_batch or \
-                (self.window <= 0 and not self.busy):
+                (self.window <= 0 and self.in_service < self.depth):
             self._close()
         elif len(self.forming) == 1 and self.window > 0:
             self.sim.spawn(self._timer(self._epoch))
@@ -122,16 +129,15 @@ class Batcher:
         self._pump()
 
     def _pump(self):
-        if self.busy or not self.closed:
-            return
-        self.busy = True
-        self.sim.spawn(self._serve(self.closed.pop(0)))
+        while self.in_service < self.depth and self.closed:
+            self.in_service += 1
+            self.sim.spawn(self._serve(self.closed.pop(0)))
 
     def _serve(self, batch):
         result = yield from self.service([item for _, item in batch])
         for gen, _ in batch:                 # FIFO: heap seq preserves order
             self.sim._resume(gen, result)
-        self.busy = False
+        self.in_service -= 1
         if self.window <= 0 and self.forming and not self.closed:
             self._close()                    # greedy: take what accumulated
         else:

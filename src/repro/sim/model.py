@@ -21,16 +21,50 @@ the summed recirculation occupancy of its multipass members.  All members
 resume (commit, record latency) when the round returns.  Because hot txns
 are abort-free and commit-on-send (§6.1), the admitting worker does not
 block on the round: it hands the txn to the batcher and continues, with a
-per-node credit pool (2 x ``max_batch`` outstanding hot txns) providing
-closed-loop backpressure.  Per-txn admission — ``batch_window=0`` and
-``max_batch=1``, the defaults — keeps the original synchronous path,
-event-for-event.  Warm txns' switch sub-txns stay synchronous in either
-mode: their round happens while the cold part's locks are held.
+per-node credit pool (``(pipeline_depth + 1) x max_batch`` outstanding
+hot txns) providing closed-loop backpressure.  Per-txn admission —
+``batch_window=0`` and ``max_batch=1``, the defaults — keeps the
+original synchronous path, event-for-event.  Warm txns' switch sub-txns
+stay synchronous in either mode: their round happens while the cold
+part's locks are held.
+
+Pipelined switch rounds (``SystemConfig.pipeline_depth``)
+---------------------------------------------------------
+The paper's DPDK dispatcher overlaps assembling the next batch of
+hot-txn packets with the current batch's flight; serializing rounds per
+node caps batched admission well below that.  ``pipeline_depth`` is the
+number of switch rounds a node may have in flight concurrently: the
+node's ``Batcher`` keeps servicing closed batches while earlier rounds
+are still on the wire, so round k+1 is assembled (and launched) during
+round k's flight.  ``pipeline_depth=1`` — the default — reproduces the
+serialized (PR 2) batched model event-for-event.  The serialization
+points that remain with depth > 1 are physical: the per-node NIC (below)
+and the switch pipeline locks (``pipeline_locks``).
+
+Per-node NIC serialization (``SystemConfig.nic_line_rate``)
+-----------------------------------------------------------
+With ``nic_line_rate > 0`` (bytes/second, e.g. 1.25e9 for the paper's
+10G NICs) each switch round additionally pays wire time
+``len(batch) * Timing.pkt_bytes / nic_line_rate`` on its node's NIC —
+once to serialize the request burst onto the wire (TX) and once for the
+response burst (RX) — under an exclusive per-node NIC ``Resource``, so
+concurrent in-flight rounds from one node still serialize at the NIC.
+``rtt_switch`` then models propagation + switch latency only.  The
+default ``nic_line_rate=0`` folds wire time into ``rtt_switch`` exactly
+as the pre-NIC model did (no NIC events at all — regression-pinned).
+
+``SystemConfig`` knobs, summarized: ``kind`` (p4db | noswitch |
+lmswitch), ``protocol`` (cold-path 2PL flavor), ``pipeline_locks``,
+``fast_recirc``, ``early_release``, ``drop_on_abort``, ``batch_window``
+and ``max_batch`` (batched switch admission, PR 2), ``pipeline_depth``
+(concurrent in-flight rounds per node, this PR) and ``nic_line_rate``
+(explicit NIC serialization, this PR).
 """
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -51,6 +85,9 @@ class Timing:
     t_2pc_round: float = 8e-6         # one 2PC message round
     t_client: float = 4e-6            # node-side per-txn CPU (DPDK + logic)
     t_commit_local: float = 2e-6      # commit/log-flush while locks held
+    pkt_bytes: float = 128.0          # hot-txn packet size on the wire
+                                      # (eth+ip+udp hdrs + P4DB instr list);
+                                      # only used when nic_line_rate > 0
 
 
 @dataclass
@@ -69,6 +106,15 @@ class SystemConfig:
                                       # 0 with max_batch>1 = greedy (batch
                                       # = arrivals during in-flight round)
     max_batch: int = 1                # hot txns per switch round (p4db)
+    pipeline_depth: int = 1           # switch rounds a node may have in
+                                      # flight concurrently; 1 = serialized
+                                      # rounds (the PR 2 batched model,
+                                      # event-for-event)
+    nic_line_rate: float = 0.0        # NIC line rate in bytes/s (1.25e9 =
+                                      # 10G); rounds pay TX + RX wire time
+                                      # under a per-node NIC resource.
+                                      # 0 = fold wire time into rtt_switch
+                                      # (the pre-NIC model, exactly)
 
 
 @dataclass
@@ -136,10 +182,16 @@ class ClusterSim:
         self.breakdown = collections.Counter()   # phase -> summed seconds
         self._ts = 0
         # batched switch admission (see module docstring): per-txn rounds
-        # when batch_window=0 and max_batch=1 — the exact original path
+        # when batch_window=0, max_batch=1 and pipeline_depth=1 — the
+        # exact original path.  depth>1 alone still routes hot txns
+        # through the batcher (pipelined per-txn rounds).
         self.batching = system.kind == "p4db" and \
-            (system.max_batch > 1 or system.batch_window > 0)
-        self.hot_credits = 2 * max(1, system.max_batch)
+            (system.max_batch > 1 or system.batch_window > 0 or
+             system.pipeline_depth > 1)
+        # credit pool: pipeline_depth rounds in flight + one forming batch
+        # (depth=1 keeps the PR 2 pool of 2 x max_batch)
+        self.hot_credits = (max(1, system.pipeline_depth) + 1) * \
+            max(1, system.max_batch)
         self.rounds = 0                          # batched switch rounds
         self.round_txns = 0                      # hot txns they carried
 
@@ -171,9 +223,9 @@ class ClusterSim:
                 # the next txn while the round is in flight; the credit
                 # pool bounds outstanding hot txns (closed-loop)
                 yield ("acquire", self.credits[node])
-                sim.spawn(self.hot_member(node, prof, t0))
+                sim.spawn(self._run_hot_batched(node, prof, t0))
                 continue
-            committed = yield from self.run_txn(prof, ts)
+            committed = yield from self.run_txn(prof, ts, node)
             attempt = 1
             while not committed:
                 self.aborts[prof.klass] += 1
@@ -183,7 +235,7 @@ class ClusterSim:
                     break
                 attempt += 1
                 self._ts += 1
-                committed = yield from self.run_txn(prof, self._ts)
+                committed = yield from self.run_txn(prof, self._ts, node)
             if not committed:
                 continue
             if sim.now >= self.warmup:
@@ -195,15 +247,16 @@ class ClusterSim:
                 self.lat_sum["all"] += sim.now - t0
                 self.lat_n["all"] += 1
 
-    def run_txn(self, prof: TxnProfile, ts: int):
+    def run_txn(self, prof: TxnProfile, ts: int, node: Optional[int] = None):
+        node = prof.home if node is None else node
         if self.sys.kind == "p4db" and prof.klass == "hot":
-            yield from self.switch_txn(prof)
+            yield from self.switch_txn(prof, node)
             return True
         if self.sys.kind == "p4db" and prof.klass == "warm":
             ok = yield from self.cold_part(prof, ts)
             if not ok:
                 return False
-            yield from self.switch_txn(prof)
+            yield from self.switch_txn(prof, node)
             # commit: 2PC prepare already implicit; switch multicasts the
             # decision, saving the second round (paper Fig 10)
             if len(prof.participants) > 1:
@@ -232,7 +285,7 @@ class ClusterSim:
         return True
 
     # ------------------------------------------------ batched admission --
-    def hot_member(self, node: int, prof: TxnProfile, t0: float):
+    def _run_hot_batched(self, node: int, prof: TxnProfile, t0: float):
         """One hot txn's life under batched admission: join the node's
         switch-batcher, resume when its round returns, commit."""
         yield ("join", self.batchers[node], (prof, self.sim.now))
@@ -247,16 +300,34 @@ class ClusterSim:
             self.lat_n["all"] += 1
         yield ("release", self.credits[node])
 
-    def _switch_round(self, items):
+    def _nic_xfer(self, node: int, n_pkts: int):
+        """Serialize ``n_pkts`` hot-txn packets through the node's NIC:
+        exclusive use of the port for ``n_pkts * pkt_bytes /
+        nic_line_rate`` seconds.  Concurrent in-flight rounds from one
+        node queue here — the NIC is a physical serialization point that
+        pipelining cannot overlap away."""
+        t0 = self.sim.now
+        yield ("acquire", self.nics[node])
+        self._charge("nic_wait", self.sim.now - t0)
+        wire = n_pkts * self.T.pkt_bytes / self.sys.nic_line_rate
+        self._charge("nic_wire", wire)
+        yield ("delay", wire)
+        yield ("release", self.nics[node])
+
+    def _switch_round(self, node: int, items):
         """Service one batch: a single switch round (one ``rtt_switch``)
         carrying every member; pipeline occupancy is per-txn ``t_pipe``
         plus the summed recirculations of multipass members under ONE
-        pipeline-lock hold."""
+        pipeline-lock hold.  With ``nic_line_rate > 0`` the round also
+        pays TX wire time before flight and RX wire time after, each
+        under the node's exclusive NIC resource."""
         T = self.T
         t_start = self.sim.now
         for _, t_join in items:
             self._charge("batch_wait", t_start - t_join)
         self._charge("switch", T.rtt_switch)
+        if self.sys.nic_line_rate > 0:
+            yield from self._nic_xfer(node, len(items))       # TX burst
         yield ("delay", T.rtt_switch / 2)
         base = T.t_pipe * len(items)
         rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
@@ -271,12 +342,17 @@ class ClusterSim:
         else:
             yield ("delay", base)
         yield ("delay", T.rtt_switch / 2)
+        if self.sys.nic_line_rate > 0:
+            yield from self._nic_xfer(node, len(items))       # RX burst
         self.rounds += 1
         self.round_txns += len(items)
 
-    def switch_txn(self, prof: TxnProfile):
+    def switch_txn(self, prof: TxnProfile, node: Optional[int] = None):
         T = self.T
+        node = prof.home if node is None else node
         self._charge("switch", T.rtt_switch)
+        if self.sys.nic_line_rate > 0:
+            yield from self._nic_xfer(node, 1)                # TX
         yield ("delay", T.rtt_switch / 2)
         if prof.passes == 1:
             yield ("delay", T.t_pipe)
@@ -290,6 +366,8 @@ class ClusterSim:
             yield ("delay", T.t_pipe + (prof.passes - 1) * rc)
             yield ("release", self.pipe)
         yield ("delay", T.rtt_switch / 2)
+        if self.sys.nic_line_rate > 0:
+            yield from self._nic_xfer(node, 1)                # RX
 
     def cold_part(self, prof: TxnProfile, ts: int, include_hot=False):
         T = self.T
@@ -344,11 +422,13 @@ class ClusterSim:
     # --------------------------------------------------------------- run --
     def run(self):
         self.sim = Sim()
-        self.batchers = [Batcher(self.sim, self._switch_round,
-                                 self.sys.batch_window, self.sys.max_batch)
-                         for _ in range(self.n_nodes)]
+        self.batchers = [Batcher(self.sim, partial(self._switch_round, node),
+                                 self.sys.batch_window, self.sys.max_batch,
+                                 depth=self.sys.pipeline_depth)
+                         for node in range(self.n_nodes)]
         self.credits = [Resource(self.hot_credits)
                         for _ in range(self.n_nodes)]
+        self.nics = [Resource(1) for _ in range(self.n_nodes)]
         for node in range(self.n_nodes):
             for w in range(self.wpn):
                 g = self.worker(node)

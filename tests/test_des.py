@@ -142,6 +142,98 @@ def test_batcher_deterministic_across_identical_seeds():
     assert t1 != t3        # different seed genuinely changes the schedule
 
 
+def test_pipelined_batcher_overlaps_rounds_up_to_depth():
+    """depth=d lets up to d batches be in service concurrently; batch
+    k+1 is assembled and launched while batch k is still in flight."""
+    sim = Sim()
+    served, inflight, peak = [], [0], [0]
+
+    def service(items):
+        inflight[0] += 1
+        peak[0] = max(peak[0], inflight[0])
+        served.append((sim.now, list(items)))
+        yield ("delay", 10e-6)
+        inflight[0] -= 1
+
+    b = Batcher(sim, service, window=1e-3, max_batch=2, depth=2)
+    events = []
+    _run_members(sim, b, [(i * 1e-6, f"m{i}") for i in range(8)], events)
+    sim.run(1.0)
+    assert [items for _, items in served] == \
+        [[f"m{i}", f"m{i + 1}"] for i in range(0, 8, 2)]
+    assert peak[0] == 2                      # overlapped, but never > depth
+    # batches 1 and 2 launch back-to-back (1us apart as members gather),
+    # NOT 10us apart as the serialized discipline would force
+    assert served[1][0] - served[0][0] < 10e-6
+
+
+def test_pipelined_batcher_depth1_is_serialized():
+    """depth=1 (the default) keeps the strict one-at-a-time discipline."""
+    sim = Sim()
+    served, inflight, peak = [], [0], [0]
+
+    def service(items):
+        inflight[0] += 1
+        peak[0] = max(peak[0], inflight[0])
+        served.append(sim.now)
+        yield ("delay", 10e-6)
+        inflight[0] -= 1
+
+    b = Batcher(sim, service, window=1e-3, max_batch=2)
+    events = []
+    _run_members(sim, b, [(i * 1e-6, f"m{i}") for i in range(8)], events)
+    sim.run(1.0)
+    assert peak[0] == 1
+    for t0, t1 in zip(served, served[1:]):
+        assert t1 >= t0 + 10e-6              # strictly serialized
+
+
+def test_pipelined_batcher_members_resume_with_their_round():
+    """With depth 2, a short round launched second may finish first; its
+    members resume on THEIR round's completion, batch-atomically."""
+    sim = Sim()
+
+    def service(items):
+        # first round is slow, second is fast
+        yield ("delay", 20e-6 if "m0" in items else 1e-6)
+        return tuple(items)
+
+    b = Batcher(sim, service, window=1e-3, max_batch=2, depth=2)
+    events = []
+    _run_members(sim, b, [(i * 1e-6, f"m{i}") for i in range(4)], events)
+    sim.run(1.0)
+    resumes = [(e[2], e[1], e[3]) for e in events if e[0] == "resume"]
+    by_name = dict((n, (t, got)) for n, t, got in resumes)
+    # m2/m3's fast round overtakes m0/m1's slow one...
+    assert by_name["m2"][0] < by_name["m0"][0]
+    # ...and every member got its OWN round's return value
+    assert by_name["m0"][1] == by_name["m1"][1] == ("m0", "m1")
+    assert by_name["m2"][1] == by_name["m3"][1] == ("m2", "m3")
+
+
+def test_pipelined_batcher_greedy_accumulates_while_slots_full():
+    """window=0, depth=2: joins dispatch immediately while a slot is
+    free; once both slots are occupied they accumulate and go out
+    together when a slot frees."""
+    sim = Sim()
+    served = []
+
+    def service(items):
+        served.append((sim.now, list(items)))
+        yield ("delay", 10e-6)
+
+    b = Batcher(sim, service, window=0.0, max_batch=8, depth=2)
+    events = []
+    arrivals = [(0.0, "a"), (1e-6, "b"),
+                (2e-6, "c"), (3e-6, "d"), (4e-6, "e")]
+    _run_members(sim, b, arrivals, events)
+    sim.run(1.0)
+    # a and b each grab a free slot solo; c,d,e accumulate while both
+    # rounds are in flight and dispatch together when a's slot frees
+    assert served == [(0.0, ["a"]), (1e-6, ["b"]),
+                      (10e-6, ["c", "d", "e"])]
+
+
 def test_resource_handoff_keeps_used_consistent():
     """On release with queued waiters the slot is handed off directly:
     ``used`` never exceeds capacity, never goes negative, and ends at 0."""

@@ -1,0 +1,185 @@
+"""Pipelined switch rounds + NIC serialization in the timing simulator.
+
+Regression contracts (ISSUE 3):
+  * ``pipeline_depth=1`` (and ``nic_line_rate=0``) IS the PR 2 batched
+    model — pinned event-for-event against a golden fixture generated
+    from the PR 2 code (tests/data/golden_sim_pr2.json: full result
+    dicts, i.e. throughput, commit counters, phase breakdown sums and
+    latency means, which together hash the whole event schedule);
+  * the default config still reproduces the per-txn model exactly;
+  * depth > 1 is deterministic, never slower than depth 1 on all-hot
+    YCSB-A, and conserves committed-txn counts.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import common as C
+from repro.sim.model import SystemConfig, Timing
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_sim_pr2.json")
+PIPED = dict(batch_window=5e-6, max_batch=32, pipeline_depth=4)
+
+
+@pytest.fixture(scope="module")
+def allhot_a():
+    return C.ycsb_profiles(variant="A", n=1500, p_hot=1.0)[0]
+
+
+@pytest.fixture(scope="module")
+def mixed_a():
+    return C.ycsb_profiles(variant="A", n=1500)[0]
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+# ------------------------------------------------ PR 2 golden pins --------
+
+def test_depth1_pins_to_pr2_batched_trace(allhot_a, golden):
+    """pipeline_depth=1 must reproduce the PR 2 batched model
+    event-for-event, at a windowed and a greedy sweep point."""
+    out = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.01,
+                    seed=3, batch_window=5e-6, max_batch=32,
+                    pipeline_depth=1)
+    assert out == golden["allhot_batched_mb32_w5us"]
+    out = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.01,
+                    seed=3, batch_window=0.0, max_batch=8,
+                    pipeline_depth=1)
+    assert out == golden["allhot_greedy_mb8_w0"]
+
+
+def test_depth1_pins_to_pr2_on_mixed_workload(mixed_a, golden):
+    out = C.run_sim(mixed_a, SystemConfig(kind="p4db"), sim_time=0.01,
+                    seed=3, batch_window=5e-6, max_batch=32,
+                    pipeline_depth=1)
+    assert out == golden["mixed_batched_mb32_w5us"]
+
+
+def test_defaults_pin_to_per_txn_model(allhot_a, golden):
+    """The default config (depth=1, nic off, per-txn admission) must be
+    the original synchronous model, event-for-event — both implicitly
+    and with every new knob spelled out."""
+    default = C.run_sim(allhot_a, SystemConfig(kind="p4db"),
+                        sim_time=0.01, seed=3)
+    assert default == golden["allhot_per_txn_default"]
+    explicit = C.run_sim(allhot_a, SystemConfig(kind="p4db"),
+                         sim_time=0.01, seed=3, batch_window=0.0,
+                         max_batch=1, pipeline_depth=1, nic_line_rate=0.0)
+    assert explicit == default
+    assert default["switch_rounds"] == 0
+    assert "nic_wire" not in default["breakdown"]
+
+
+# ------------------------------------------------- depth > 1 --------------
+
+def test_pipelined_never_slower_than_depth1_on_allhot(allhot_a):
+    d1 = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.015,
+                   batch_window=5e-6, max_batch=32, pipeline_depth=1)
+    d4 = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.015,
+                   **PIPED)
+    assert d4["throughput"] >= d1["throughput"]
+    # and measurably so (recorded in BENCH_sim_pipeline.json)
+    assert d4["throughput"] >= 1.1 * d1["throughput"]
+
+
+def test_pipelined_small_batches_beat_per_txn(allhot_a):
+    """The new crossover: with serialized rounds (PR 2) small batches
+    lose to 20 synchronous workers; with pipelining they win."""
+    per = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.015)
+    small_d1 = C.run_sim(allhot_a, SystemConfig(kind="p4db"),
+                         sim_time=0.015, batch_window=5e-6, max_batch=4,
+                         pipeline_depth=1)
+    small_d4 = C.run_sim(allhot_a, SystemConfig(kind="p4db"),
+                         sim_time=0.015, batch_window=5e-6, max_batch=4,
+                         pipeline_depth=4)
+    assert small_d1["throughput"] < per["throughput"]   # PR 2 regime
+    assert small_d4["throughput"] > per["throughput"]   # pipelined regime
+
+
+def test_pipelined_deterministic_across_identical_seeds(allhot_a):
+    cfg = SystemConfig(kind="p4db", **PIPED)
+    a = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=5)
+    b = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=5)
+    assert a == b
+    c = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=6)
+    assert a != c          # a different seed genuinely reschedules
+
+
+def test_pipelined_conserves_committed_txn_counts(allhot_a):
+    out = C.run_sim(allhot_a, SystemConfig(kind="p4db", **PIPED),
+                    sim_time=0.01)
+    # all-hot: every commit is a hot commit, none abort
+    assert out["commits"]["total"] == out["commits"]["hot"]
+    assert out["aborts"].get("hot", 0) == 0
+    # every commit counted after warmup rode a serviced round, and no
+    # round carried more than max_batch members
+    assert out["switch_rounds"] > 0
+    assert out["commits"]["hot"] <= out["switch_rounds"] * 32
+    assert 0 < out["avg_batch"] <= 32
+
+
+def test_pipelined_depth_monotone_none_slower(allhot_a):
+    """Deeper pipelines never lose throughput on the all-hot workload
+    (the NIC-less model has no penalty for extra in-flight rounds)."""
+    tputs = [C.run_sim(allhot_a, SystemConfig(kind="p4db"),
+                       sim_time=0.01, batch_window=5e-6, max_batch=8,
+                       pipeline_depth=d)["throughput"]
+             for d in (1, 2, 4)]
+    assert tputs == sorted(tputs)
+
+
+# ---------------------------------------------------- NIC resource --------
+
+def test_nic_wire_time_charged_and_deterministic(allhot_a):
+    cfg = SystemConfig(kind="p4db", nic_line_rate=C.NIC_10G, **PIPED)
+    a = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=2)
+    b = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=2)
+    assert a == b
+    assert a["breakdown"]["nic_wire"] > 0
+    # wire time must equal committed+in-flight packets x per-pkt wire
+    # time x 2 (TX + RX) only in aggregate bound terms: it can never
+    # exceed 2 nics-worth of busy time per node
+    window = 0.01 - C.WARMUP
+    assert a["breakdown"]["nic_wire"] <= 2 * C.N_NODES * window * 1.01
+
+
+def test_slow_nic_throttles_throughput(allhot_a):
+    fast_nic = C.run_sim(allhot_a, SystemConfig(kind="p4db", **PIPED),
+                         sim_time=0.01, nic_line_rate=C.NIC_10G)
+    slow_nic = C.run_sim(allhot_a, SystemConfig(kind="p4db", **PIPED),
+                         sim_time=0.01, nic_line_rate=C.NIC_10G / 100)
+    assert slow_nic["throughput"] < fast_nic["throughput"]
+    # a 100MBit-class NIC serializes ~1us/pkt on TX+RX: the wire becomes
+    # a real bottleneck, not a rounding error
+    assert slow_nic["throughput"] < 0.8 * fast_nic["throughput"]
+
+
+def test_nic_applies_to_synchronous_per_txn_path(allhot_a):
+    """nic_line_rate > 0 with per-txn admission (no batching) still pays
+    wire time on the synchronous switch round."""
+    base = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.01)
+    nic = C.run_sim(allhot_a, SystemConfig(kind="p4db"), sim_time=0.01,
+                    nic_line_rate=C.NIC_10G / 100)
+    assert nic["breakdown"]["nic_wire"] > 0
+    assert nic["throughput"] < base["throughput"]
+
+
+def test_nic_breakdown_bounded_with_pipelining(allhot_a):
+    """Phase-time bound from test_sim_batch, restated for the pipelined
+    credit pool ((depth+1) x max_batch) and the NIC phases."""
+    wpn, sim_time = 20, 0.01
+    window = sim_time - C.WARMUP
+    out = C.run_sim(allhot_a, SystemConfig(kind="p4db",
+                                           nic_line_rate=C.NIC_10G,
+                                           **PIPED),
+                    workers=wpn, sim_time=sim_time)
+    credits = (PIPED["pipeline_depth"] + 1) * PIPED["max_batch"]
+    bound = (wpn + credits + 3) * C.N_NODES * window
+    total = sum(out["breakdown"].values())
+    assert 0 < total <= bound

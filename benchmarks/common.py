@@ -161,6 +161,115 @@ def sim_pipeline_compare(profiles, depths, batches, sim_time=SIM_TIME,
     return per, rows
 
 
+# ------------------------------- adaptive hot-set management (drift) ------
+# shared by benchmarks/bench_adaptive.py and benchmarks/run.py::
+# bench_adaptive: drifting workloads, the static/adaptive/oracle trio, and
+# the headline recovery ratio (BENCH_adaptive.json acceptance: adaptive
+# restores >= 0.8x the per-epoch oracle's hot-txn rate; static decays)
+
+DRIFT_PERIOD = 4e-3                    # seconds per drift phase
+RECONFIG_INTERVAL = 0.4e-3             # adaptive controller epoch
+TRACKER_DECAY = 0.1
+ADAPTIVE_TOP_K = 400                   # = hot_per_node * N_NODES (ycsb)
+ADAPTIVE_SIM_TIME_FAST = 0.014         # 3 full drift phases post-warmup
+ADAPTIVE_SIM_TIME_FULL = 0.022         # 5
+
+
+def adaptive_sim_time(fast: bool) -> float:
+    return ADAPTIVE_SIM_TIME_FAST if fast else ADAPTIVE_SIM_TIME_FULL
+
+
+def drift_generators(fast=True):
+    """(name, generator, top_k) triples; fast keeps the YCSB hotspot
+    shift only."""
+    from repro.workloads import drift
+    gens = [("ycsb_shift",
+             drift.YCSBHotspotShift(n_nodes=N_NODES, period=DRIFT_PERIOD),
+             ADAPTIVE_TOP_K)]
+    if not fast:
+        gens += [
+            ("rotating_zipf",
+             drift.RotatingZipf(n_nodes=N_NODES, period=DRIFT_PERIOD),
+             50 * N_NODES),
+            ("tpcc_rotation",
+             drift.TPCCWarehouseRotation(n_nodes=N_NODES,
+                                         period=DRIFT_PERIOD),
+             None),                    # sized from the phase-0 hot set
+        ]
+    return gens
+
+
+def drift_hot_index(gen, top_k, seed=0, n_sample=2000):
+    """Initial (phase-0) placement — what a static deployment ships."""
+    from repro.core.hotset import build_hot_index
+    from repro.workloads import drift
+    txns = gen.sample_phase(np.random.default_rng(seed), 0, n_sample)
+    k = top_k if top_k is not None else len(set(gen.hot_keys_at(0.0)))
+    return build_hot_index(drift.traces(txns), k, SWITCH), k
+
+
+def run_drift_sim(gen, mode, top_k, sim_time, hot_index=None, workers=20,
+                  seed=0, interval=RECONFIG_INTERVAL, system=None,
+                  timing=None):
+    """One drifting-workload sim run.  mode: 'static' (reconfig off —
+    the placement shipped at phase 0 serves the whole run), 'adaptive'
+    (tracker-driven epochs every ``interval``) or 'oracle' (ground-truth
+    re-placement at each phase boundary)."""
+    from repro.core.heat import HeatTracker
+    if hot_index is None:
+        hot_index, top_k = drift_hot_index(gen, top_k, seed=seed)
+    sys_cfg = system or SystemConfig(kind="p4db")
+    sys_cfg = replace(sys_cfg, reconfig_interval=0.0 if mode == "static"
+                      else interval)
+    tracker = HeatTracker(decay=TRACKER_DECAY) if mode == "adaptive" \
+        else None
+    # short warmup (vs the figure sweeps' 5 ms): phase 0 — where the
+    # static placement is still correct — must appear in the measurement
+    # window so the per-phase decay curve starts from its true baseline
+    cs = ClusterSim([], N_NODES, workers, sys_cfg,
+                    timing=timing or Timing(), seed=seed,
+                    sim_time=sim_time, warmup=2e-3, dynamic=gen,
+                    hot_index=hot_index, switch_cfg=SWITCH, tracker=tracker,
+                    oracle=(mode == "oracle"), reconfig_top_k=top_k)
+    return cs.run()
+
+
+def run_drift_modes(gen, top_k, sim_time, hot_index=None,
+                    modes=("static", "adaptive", "oracle")):
+    """The static/adaptive/oracle trio over ONE drifting stream — the
+    single driver behind both published artifacts (BENCH_adaptive.json
+    via bench_adaptive.py and the bench_adaptive CSV via run.py), so
+    they can never desynchronize their experiment."""
+    if hot_index is None:
+        hot_index, top_k = drift_hot_index(gen, top_k)
+    return {mode: run_drift_sim(gen, mode, top_k, sim_time,
+                                hot_index=hot_index)
+            for mode in modes}
+
+
+def adaptive_recovery_ratio(adaptive_out, oracle_out):
+    """Headline: adaptive hot-txn rate as a fraction of the per-epoch
+    oracle's (hot commits per post-warmup second).  Workloads that are
+    warm-by-construction (TPC-C: every txn carries cold rows) have no
+    fully-hot txns under ANY placement; there the switch-riding rate
+    (hot + warm commits/s) is the drift-sensitive metric."""
+    if oracle_out["hot_rate"] > 0:
+        return adaptive_out["hot_rate"] / oracle_out["hot_rate"]
+    return adaptive_out["switch_rate"] / max(oracle_out["switch_rate"],
+                                             1e-9)
+
+
+def static_decay_ratio(static_out):
+    """Last-phase over first-phase hot share under the static placement
+    — how much of the hot rate drift destroyed (switch share on
+    warm-by-construction workloads, as above)."""
+    ph = static_out["phase_hot_rate"]
+    if not any(ph.values()):
+        ph = static_out["phase_switch_rate"]
+    first, last = min(ph), max(ph)
+    return ph[last] / max(ph[first], 1e-9)
+
+
 def pipeline_crossover(per, rows):
     """Per depth, the smallest max_batch whose throughput beats the
     per-txn baseline (None = no batch size wins at that depth)."""

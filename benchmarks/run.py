@@ -13,6 +13,7 @@ to artifacts/bench/.
   fig16  optimal vs random data layout (throughput + latency)
   fig17  hot-set exceeding switch capacity (graceful degradation)
   fig18  TPC-C latency breakdown + existing-optimization stack
+  bench_adaptive  drifting hot set: static vs adaptive vs oracle placement
   engine switch-engine execution modes (serial / affine / staged / pallas)
 """
 from __future__ import annotations
@@ -350,6 +351,31 @@ def bench_sim_pipeline(fast=True):
               "crossover_batch"], rows)
 
 
+def bench_adaptive(fast=True):
+    """Adaptive hot-set management under drift (ISSUE 4): the same
+    drifting stream under static / adaptive / per-epoch-oracle placement;
+    the figure is hot-txn rate per drift phase plus the adaptive/oracle
+    recovery ratio (acceptance bar 0.8, recorded in
+    BENCH_adaptive.json)."""
+    rows = []
+    sim_time = C.adaptive_sim_time(fast)
+    for name, gen, top_k in C.drift_generators(fast):
+        outs = C.run_drift_modes(gen, top_k, sim_time)
+        for mode, out in outs.items():
+            for ph, hr in sorted(out["phase_hot_rate"].items()):
+                rows.append([name, mode, ph, out["throughput"],
+                             out["hot_rate"], hr, out["reconfigs"]])
+        ratio = C.adaptive_recovery_ratio(outs["adaptive"], outs["oracle"])
+        decay = C.static_decay_ratio(outs["static"])
+        emit(f"adaptive_{name}",
+             outs["adaptive"].get("lat_all", 0) * 1e6,
+             f"adaptive_vs_oracle={ratio:.2f} static_decay={decay:.2f} "
+             f"reconfigs={outs['adaptive']['reconfigs']}")
+    save_csv("bench_adaptive", ["workload", "mode", "phase", "tput",
+                                "hot_rate", "phase_hot_rate", "reconfigs"],
+             rows)
+
+
 def engine_micro():
     """Switch-engine execution modes on one batch (functional layer)."""
     import jax
@@ -401,6 +427,7 @@ def main() -> None:
     fig18_latency_and_optstack(fast)
     bench_sim_batch(fast)
     bench_sim_pipeline(fast)
+    bench_adaptive(fast)
     engine_micro()
     save_csv("summary", ["name", "us_per_call", "derived"], ROWS)
     print(f"# benchmarks done in {time.time() - t0:.0f}s "

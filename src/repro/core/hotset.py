@@ -11,7 +11,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.layout import Placement, make_layout
-from repro.core.packets import SwitchConfig
+from repro.core.packets import READ, SwitchConfig
 
 
 def access_frequencies(traces: Sequence[Sequence[Tuple[int, int]]]):
@@ -97,10 +97,26 @@ class HotIndex:
         return self._stages[idx], self._regs[idx]
 
 
-def build_hot_index(traces, top_k: int, switch: SwitchConfig,
-                    layout_fn=make_layout, seed: int = 0) -> HotIndex:
-    hot = set(detect_hotset(traces, top_k))
+def layout_for_hotset(traces, hot, switch: SwitchConfig,
+                      layout_fn=make_layout, seed: int = 0) -> Placement:
+    """Filter traces to a chosen hot set and lay it out — the shared
+    tail of every placement pipeline: offline (``build_hot_index``), the
+    functional epoch controller (db.migrate) and the sim controller
+    (sim.model) all re-place through this one path."""
+    hot = set(hot)
     hot_traces = [[(t, op) for t, op in tr if t in hot] for tr in traces]
     hot_traces = [tr for tr in hot_traces if tr]
-    placement = layout_fn(hot_traces, switch, seed=seed)
-    return HotIndex(placement)
+    # the hot SET, not the trace sample, defines membership: a chosen
+    # tuple absent from the observed window (tail key the sample missed,
+    # counts outliving the bounded window) still gets a slot — as a
+    # singleton trace it carries no co-access constraints
+    seen = {t for tr in hot_traces for t, _ in tr}
+    hot_traces += [[(t, READ)] for t in sorted(hot - seen)]
+    return layout_fn(hot_traces, switch, seed=seed)
+
+
+def build_hot_index(traces, top_k: int, switch: SwitchConfig,
+                    layout_fn=make_layout, seed: int = 0) -> HotIndex:
+    hot = detect_hotset(traces, top_k)
+    return HotIndex(layout_for_hotset(traces, hot, switch,
+                                      layout_fn=layout_fn, seed=seed))

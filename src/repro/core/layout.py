@@ -154,11 +154,26 @@ def order_partitions(d: np.ndarray, parts):
     return order, kept, dropped
 
 
+def _check_capacity(n_tuples: int, switch: SwitchConfig):
+    """A placement must fit the register file; truncating silently would
+    leave "hot" tuples unreachable on the switch (classified hot by the
+    index but with no slot), so over-capacity hot sets are an error the
+    caller must handle by shrinking top_k (paper Fig 17 models graceful
+    degradation by capping top_k, not by overflowing)."""
+    if n_tuples > switch.total_slots:
+        raise ValueError(
+            f"hot set of {n_tuples} tuples exceeds switch register "
+            f"capacity {switch.n_stages} stages x {switch.regs_per_stage} "
+            f"regs = {switch.total_slots}; reduce top_k or enlarge the "
+            f"switch config")
+
+
 def make_layout(traces, switch: SwitchConfig, seed: int = 0) -> Placement:
     g = ConflictGraph.from_traces(traces)
     n = len(g.nodes)
     if n == 0:
         return Placement({}, {"single_pass_rate": 1.0})
+    _check_capacity(n, switch)
     parts, _ = partition_maxcut(g.w, switch.n_stages, switch.regs_per_stage,
                                 seed=seed)
     order, kept, dropped = order_partitions(g.d, parts)
@@ -179,11 +194,16 @@ def make_layout(traces, switch: SwitchConfig, seed: int = 0) -> Placement:
 def random_layout(traces, switch: SwitchConfig, seed: int = 0) -> Placement:
     """Worst-case baseline of §7.6.3: tuples assigned to stages randomly."""
     ids = sorted({t for tr in traces for t, _ in tr})
+    _check_capacity(len(ids), switch)
     rng = np.random.default_rng(seed)
     slot = {}
     used = collections.Counter()
     for t in ids:
         s = int(rng.integers(switch.n_stages))
+        if used[s] >= switch.regs_per_stage:   # stage full: redraw among
+            room = [q for q in range(switch.n_stages)   # stages with room
+                    if used[q] < switch.regs_per_stage]
+            s = room[int(rng.integers(len(room)))]
         slot[t] = (s, used[s])
         used[s] += 1
     pl = Placement(slot)

@@ -60,6 +60,7 @@ class DBNode:
         self.protocol = protocol
         self.wal: List[LogEntry] = []
         self.ts = 0
+        self.hot_index = None     # replicated copy, swapped by migrations
 
     # ---------------------------------------------------------- locking --
     def acquire(self, tid: int, ts: int, key: int, mode: str):
@@ -117,13 +118,32 @@ class Cluster:
         self.nodes = [DBNode(i, protocol) for i in range(n_nodes)]
         self.switch_cfg = switch_cfg
         self.switch = SwitchEngine(switch_cfg)
-        self.hot_index = hot_index
+        self.hot_index = hot_index          # setter replicates to nodes
         self.use_switch = use_switch and hot_index is not None
         self.switch_mode = switch_mode
         self._ts = 0
         self.stats = collections.Counter()
+        # adaptive hot-set management (repro.core.heat / repro.db.migrate):
+        # both stay None unless an EpochController attaches — every hot/cold
+        # path below is byte-identical to a plain cluster in that case
+        self.tracker = None
+        self.controller = None
 
     # ------------------------------------------------------------ setup --
+    @property
+    def hot_index(self):
+        return self._hot_index
+
+    @hot_index.setter
+    def hot_index(self, hi):
+        """One assignment swaps the coordinator copy AND every node's
+        replica — classification (which reads the home node's replica)
+        and packet building (which reads the coordinator copy) can never
+        observe different placements, no matter who re-places."""
+        self._hot_index = hi
+        for n in self.nodes:
+            n.hot_index = hi
+
     def load(self, key: int, value: int):
         self.nodes[node_of(key)].store[key] = value
         if self.use_switch and self.hot_index.is_hot(key):
@@ -134,10 +154,24 @@ class Cluster:
         if not self.use_switch:
             return "cold"
         trace = [(k, o) for o, k, _ in txn.ops]
-        return self.hot_index.classify(trace)
+        # the home node's REPLICA of the index does the classification
+        # (paper §6.1: each node's partition manager holds a copy) — this
+        # is what makes the migration's per-node swap load-bearing
+        return self.nodes[txn.home].hot_index.classify(trace)
+
+    # ---------------------------------------------- adaptive hot-set mgmt --
+    def _observe(self, txn: Txn):
+        """Feed the heat tracker (when attached); returns True when the
+        epoch controller is due — the caller drains in-flight hot groups
+        and then calls ``controller.reconfigure()``."""
+        if self.tracker is not None:
+            self.tracker.observe_trace([(k, o) for o, k, _ in txn.ops])
+        return self.controller is not None and self.controller.note()
 
     # -------------------------------------------------------- execution --
     def run(self, txn: Txn, max_retries: int = 10):
+        if self._observe(txn):
+            self.controller.reconfigure()   # per-txn path: always drained
         kind = self.classify(txn)
         if kind == "hot":                 # switch txns are abort-free (§5)
             self.stats["hot"] += 1
@@ -208,6 +242,11 @@ class Cluster:
         results: List[Optional[list]] = [None] * len(txns)
         pending: List[Tuple[int, Txn]] = []
         for i, txn in enumerate(txns):
+            if self._observe(txn):
+                # drain in-flight hot groups BEFORE the migration touches
+                # the registers or swaps the index (protocol step 1)
+                self._flush_hot_group(pending, results)
+                self.controller.reconfigure()
             kind = self.classify(txn)
             if kind == "hot":
                 self.stats["hot"] += 1
@@ -396,11 +435,24 @@ class Cluster:
 
     # -------------------------------------------------------- recovery --
     def crash_switch_and_recover(self):
-        """Rebuild switch registers from the nodes' WALs (paper §6.1/A.3)."""
+        """Rebuild switch registers from the nodes' WALs (paper §6.1/A.3).
+
+        Migrations are recovery checkpoints: each one re-snapshots the
+        offload (``migrate``) after draining in-flight groups, so only
+        switch sends logged AFTER a node's last ``migrate_end`` entry are
+        replayed — their packets were built under the placement that is
+        still current, and everything earlier is already captured in the
+        snapshot.  With no migrations this is the original full-WAL
+        replay."""
         entries = []          # (gid_or_None, send_entry, result_entry)
         for n in self.nodes:
-            sends = {e.tid: e for e in n.wal if e.kind == "switch_send"}
-            res = {e.tid: e for e in n.wal if e.kind == "switch_result"}
+            wal = n.wal
+            for i in range(len(wal) - 1, -1, -1):
+                if wal[i].kind == "migrate_end":
+                    wal = wal[i + 1:]
+                    break
+            sends = {e.tid: e for e in wal if e.kind == "switch_send"}
+            res = {e.tid: e for e in wal if e.kind == "switch_result"}
             for tid, se in sends.items():
                 re = res.get(tid)
                 gid = re.payload["gid"] if re else None

@@ -1,0 +1,207 @@
+"""Epoch re-placement and switch migration — the control plane that turns
+the offline hot-set pipeline (detect_hotset -> make_layout -> HotIndex)
+into a living subsystem.
+
+The paper bakes the placement into the switch program at deploy time and
+leaves dynamic re-placement open (§3.1/§4); TurboKV shows in-switch state
+can be re-balanced at runtime.  Here an ``EpochController`` watches a
+``HeatTracker`` (repro.core.heat) fed from the DBMS hot path and, every
+``interval`` transactions, re-runs hot-set detection + declustered layout
+on the observed trace window, diffs the placements, and executes the
+migration protocol on the functional cluster:
+
+  1. **drain** — the caller (``Cluster.run_batch``) flushes any pending
+     hot group before the controller fires, so no switch txn is in
+     flight across the boundary (hot txns are commit-on-send, so a drain
+     is just a group flush, never an abort);
+  2. **begin** — every node WAL-logs ``migrate_begin`` (the migration is
+     a distributed txn with its own tid);
+  3. **evict** — tuples leaving the switch have their live register
+     values read back into their home node's store, WAL-logged as
+     ordinary ``write`` entries under the migration tid (so node-crash
+     recovery replays them);
+  4. **load** — the new register file is rebuilt: tuples staying hot
+     carry their value from the old (stage, reg) slot, newly-hot tuples
+     are read from their home node's store;
+  5. **swap** — the replicated ``HotIndex`` is atomically replaced on
+     every node (one reference assignment per node — between transaction
+     boundaries, so no reader ever sees a half-swapped index);
+  6. **end** — every node WAL-logs ``migrate_end`` + ``commit``; the
+     cluster re-snapshots the offload (``snapshot_offload``), making the
+     migration a recovery checkpoint: ``crash_switch_and_recover``
+     replays only switch sends logged AFTER each node's last
+     ``migrate_end``, against the migration-time register snapshot —
+     recovery is exact across any number of migration boundaries.
+
+With ``interval=0`` the controller never fires and an attached tracker
+only observes: results, registers and WALs are byte-identical to a
+cluster without the subsystem (pinned in tests/test_adaptive.py).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.heat import HeatTracker
+from repro.core.hotset import HotIndex, layout_for_hotset
+from repro.core.layout import Placement, make_layout
+from repro.db.txn import node_of
+
+# migration tids live far above workload tids so WAL readers can tell
+# them apart (workload tids are a small itertools.count)
+_MIG_TID = itertools.count(1 << 40)
+
+
+@dataclass
+class MigrationPlan:
+    """Diff between two placements, in deterministic (sorted-key) order."""
+    evict: List[Tuple[int, Tuple[int, int]]]       # key, old (stage, reg)
+    load: List[Tuple[int, Tuple[int, int]]]        # key, new (stage, reg)
+    moved: List[Tuple[int, Tuple[int, int], Tuple[int, int]]]
+    stay: int                                      # same slot in both
+
+    @property
+    def n_changed(self):
+        return len(self.evict) + len(self.load) + len(self.moved)
+
+    def summary(self) -> Dict[str, int]:
+        return dict(evict=len(self.evict), load=len(self.load),
+                    moved=len(self.moved), stay=self.stay)
+
+
+def diff_placements(old: Placement, new: Placement) -> MigrationPlan:
+    evict, load, moved = [], [], []
+    stay = 0
+    for k in sorted(old.slot):
+        if k not in new.slot:
+            evict.append((k, old.slot[k]))
+    for k in sorted(new.slot):
+        ns = new.slot[k]
+        os_ = old.slot.get(k)
+        if os_ is None:
+            load.append((k, ns))
+        elif os_ != ns:
+            moved.append((k, os_, ns))
+        else:
+            stay += 1
+    return MigrationPlan(evict, load, moved, stay)
+
+
+def migrate(cluster, new_index: HotIndex,
+            plan: Optional[MigrationPlan] = None) -> MigrationPlan:
+    """Execute the migration protocol on a functional ``Cluster``.
+
+    The caller must have drained in-flight hot groups (``run_batch``
+    flushes before invoking the controller; the per-txn path is trivially
+    drained between txns)."""
+    from repro.core.engine import init_registers
+
+    old_index = cluster.hot_index
+    old = old_index.placement if old_index is not None else Placement({})
+    if plan is None:
+        plan = diff_placements(old, new_index.placement)
+    mig_tid = next(_MIG_TID)
+    epoch = cluster.stats["migrations"]
+
+    for n in cluster.nodes:
+        n.log("migrate_begin", mig_tid, epoch=epoch, **plan.summary())
+
+    # evict: live register values return to their home node's store
+    regs = np.asarray(cluster.switch.registers)
+    for key, (s, r) in plan.evict:
+        n = cluster.nodes[node_of(key)]
+        val = int(regs[s, r])
+        n.log("write", mig_tid, key=key, old=n.store[key], new=val)
+        n.store[key] = val
+
+    # load: rebuild the register file under the new placement.  Staying
+    # and moved tuples carry their live switch value; newly-hot tuples
+    # come from their home node's store.
+    S, R = regs.shape
+    new_regs = np.zeros((S, R), np.int32)
+    for key, (s, r) in new_index.placement.slot.items():
+        o = old.slot.get(key)
+        if o is not None:
+            new_regs[s, r] = regs[o[0], o[1]]
+        else:
+            new_regs[s, r] = cluster.nodes[node_of(key)].store[key]
+    cluster.switch.registers = init_registers(cluster.switch_cfg, new_regs)
+
+    # swap the replicated index (the cluster setter fans the new copy
+    # out to every node atomically), log the boundary, then checkpoint
+    cluster.hot_index = new_index
+    for n in cluster.nodes:
+        n.log("migrate_end", mig_tid, epoch=epoch)
+        n.log("commit", mig_tid)
+    cluster.snapshot_offload()
+    cluster.stats["migrations"] += 1
+    cluster.stats["migrated_tuples"] += plan.n_changed
+    return plan
+
+
+class EpochController:
+    """Periodic re-placement driver for a functional ``Cluster``.
+
+    Attaches itself to the cluster; ``Cluster.run`` / ``run_batch`` call
+    ``note()`` once per admitted transaction and invoke ``reconfigure()``
+    (after draining) when it returns True.  ``interval=0`` disables the
+    controller entirely.
+
+    ``top_k`` defaults to the size of the cluster's current hot set and
+    is clamped to the switch's register capacity (over-capacity layouts
+    raise in ``make_layout``)."""
+
+    def __init__(self, cluster, tracker: HeatTracker, interval: int,
+                 top_k: Optional[int] = None, layout_fn=make_layout,
+                 seed: int = 0, min_change: int = 1):
+        self.cluster = cluster
+        self.tracker = tracker
+        self.interval = int(interval)
+        self.top_k = top_k
+        self.layout_fn = layout_fn
+        self.seed = seed
+        self.min_change = min_change   # skip no-op migrations below this
+        self._since = 0
+        self.epochs = 0                # reconfigure() invocations
+        self.plans: List[Dict[str, int]] = []
+        cluster.tracker = tracker
+        cluster.controller = self
+
+    def note(self) -> bool:
+        """Count one admitted txn; True when a reconfiguration is due."""
+        if self.interval <= 0:
+            return False
+        self._since += 1
+        return self._since >= self.interval
+
+    def reconfigure(self) -> Optional[MigrationPlan]:
+        """Re-detect the hot set from the tracker, re-layout, migrate.
+
+        Returns the executed plan, or None when the new placement is
+        empty or changes fewer than ``min_change`` slots."""
+        self._since = 0
+        self.epochs += 1
+        k = self.top_k
+        if k is None:
+            k = len(self.cluster.hot_index.placement.slot) \
+                if self.cluster.hot_index is not None else 0
+        k = min(k, self.cluster.switch_cfg.total_slots)
+        hot = self.tracker.top_k(k)
+        traces = self.tracker.window_traces()
+        self.tracker.advance_epoch()
+        placement = layout_for_hotset(traces, hot, self.cluster.switch_cfg,
+                                      layout_fn=self.layout_fn,
+                                      seed=self.seed)
+        if not placement.slot:
+            return None
+        old = self.cluster.hot_index.placement \
+            if self.cluster.hot_index is not None else Placement({})
+        plan = diff_placements(old, placement)
+        if plan.n_changed < self.min_change:
+            return None
+        plan = migrate(self.cluster, HotIndex(placement), plan)
+        self.plans.append(plan.summary())
+        return plan

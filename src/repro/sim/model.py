@@ -53,12 +53,54 @@ concurrent in-flight rounds from one node still serialize at the NIC.
 default ``nic_line_rate=0`` folds wire time into ``rtt_switch`` exactly
 as the pre-NIC model did (no NIC events at all — regression-pinned).
 
+Shared switch ingress (``SystemConfig.switch_service_rate``)
+------------------------------------------------------------
+Rounds from different nodes used to contend only on the pipeline-lock
+Resource; the real Tofino has ONE ingress pipeline whose packet rate
+bounds aggregate throughput across ALL nodes.  With
+``switch_service_rate > 0`` (packets/second) every switch round — and
+every synchronous per-txn/warm switch access — holds a single global
+ingress ``Resource(1)`` for ``n_pkts / switch_service_rate`` seconds
+after its request burst arrives.  This makes the NIC-vs-switch
+bottleneck crossover measurable: aggregate commits/s is capped by
+``min(sum of NIC rates, switch_service_rate)``.  ``0`` (default)
+disables the resource entirely — no extra events, the pre-ingress
+model exactly.
+
+Cold-path wire accounting (with ``nic_line_rate > 0``)
+------------------------------------------------------
+``rtt_node``/``t_2pc_round`` used to fold NIC serialization in; with an
+explicit NIC, cold remote accesses and 2PC decision rounds also pay
+per-message wire time under the accessing node's NIC ``Resource``, so
+hot switch traffic can visibly starve the cold path (and vice versa) at
+high line utilization.  ``nic_line_rate=0`` keeps both folded, exactly
+as before.
+
+Adaptive hot-set re-placement (``SystemConfig.reconfig_interval``)
+------------------------------------------------------------------
+In dynamic-workload mode (``ClusterSim(dynamic=...)``, fed by a drift
+generator from ``repro.workloads.drift``) transactions are sampled and
+classified at admission time against a MUTABLE hot index.  With
+``reconfig_interval > 0`` an epoch controller coroutine periodically
+re-detects the hot set (from a ``repro.core.heat.HeatTracker`` fed by
+the admission loop, or from the generator's ground truth when
+``oracle=True`` — then aligned to phase boundaries), re-runs
+``make_layout`` on the observed trace window, pauses the switch for
+``Timing.t_reconfig`` seconds (the migration: drain + register
+copy-out/copy-in + index swap) and atomically swaps the index.  Switch
+rounds arriving during the pause wait it out (``reconfig_wait`` phase).
+``reconfig_interval=0`` (default) spawns nothing: the static
+profile-driven path is untouched, event for event.
+
 ``SystemConfig`` knobs, summarized: ``kind`` (p4db | noswitch |
 lmswitch), ``protocol`` (cold-path 2PL flavor), ``pipeline_locks``,
 ``fast_recirc``, ``early_release``, ``drop_on_abort``, ``batch_window``
 and ``max_batch`` (batched switch admission, PR 2), ``pipeline_depth``
-(concurrent in-flight rounds per node, this PR) and ``nic_line_rate``
-(explicit NIC serialization, this PR).
+(concurrent in-flight rounds per node, PR 3), ``nic_line_rate``
+(explicit NIC serialization, PR 3; now also charged on cold remote
+accesses and 2PC rounds), ``switch_service_rate`` (shared switch
+ingress, this PR) and ``reconfig_interval`` (adaptive re-placement
+epochs, this PR).
 """
 from __future__ import annotations
 
@@ -69,6 +111,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.heat import HeatTracker
+from repro.core.hotset import HotIndex, layout_for_hotset
 from repro.core.layout import trace_reorderable
 from repro.sim.des import Batcher, Resource, Sim, SimLock
 
@@ -88,6 +132,10 @@ class Timing:
     pkt_bytes: float = 128.0          # hot-txn packet size on the wire
                                       # (eth+ip+udp hdrs + P4DB instr list);
                                       # only used when nic_line_rate > 0
+    t_reconfig: float = 100e-6        # switch pause per re-placement epoch
+                                      # (drain + register copy-out/in +
+                                      # index swap); only charged when
+                                      # reconfig_interval > 0
 
 
 @dataclass
@@ -112,9 +160,20 @@ class SystemConfig:
                                       # event-for-event)
     nic_line_rate: float = 0.0        # NIC line rate in bytes/s (1.25e9 =
                                       # 10G); rounds pay TX + RX wire time
-                                      # under a per-node NIC resource.
-                                      # 0 = fold wire time into rtt_switch
-                                      # (the pre-NIC model, exactly)
+                                      # under a per-node NIC resource, and
+                                      # cold remote accesses / 2PC rounds
+                                      # pay per-message wire time there too.
+                                      # 0 = fold wire time into rtt_switch/
+                                      # rtt_node (the pre-NIC model, exactly)
+    switch_service_rate: float = 0.0  # shared switch-ingress admission
+                                      # rate in packets/s across ALL nodes
+                                      # (ONE pipeline, as on the Tofino);
+                                      # 0 = unbounded (no ingress events,
+                                      # the pre-ingress model exactly)
+    reconfig_interval: float = 0.0    # seconds between adaptive hot-set
+                                      # re-placement epochs (dynamic-
+                                      # workload mode only); 0 = static
+                                      # placement, controller never spawns
 
 
 @dataclass
@@ -164,7 +223,11 @@ class ClusterSim:
     def __init__(self, profiles: List[TxnProfile], n_nodes: int,
                  workers_per_node: int, system: SystemConfig,
                  timing: Timing = Timing(), seed: int = 0,
-                 sim_time: float = 0.05, warmup: float = 0.01):
+                 sim_time: float = 0.05, warmup: float = 0.01,
+                 dynamic=None, hot_index: Optional[HotIndex] = None,
+                 switch_cfg=None, tracker: Optional[HeatTracker] = None,
+                 oracle: bool = False, reconfig_top_k: Optional[int] = None,
+                 layout_seed: int = 0):
         self.profiles = profiles
         self.n_nodes = n_nodes
         self.wpn = workers_per_node
@@ -181,6 +244,32 @@ class ClusterSim:
         self.lat_n = collections.Counter()
         self.breakdown = collections.Counter()   # phase -> summed seconds
         self._ts = 0
+        # dynamic-workload mode (adaptive hot-set management): txns are
+        # sampled from a drift generator and profiled at admission against
+        # a mutable hot index; with reconfig_interval > 0 a controller
+        # coroutine periodically re-places it (tracker-driven, or from
+        # generator ground truth when oracle=True).  dynamic=None keeps
+        # the static profile-driven path untouched, event for event.
+        self.dynamic = dynamic
+        self.hot_index = hot_index
+        self.switch_cfg = switch_cfg
+        self.oracle = oracle
+        self.reconfig_top_k = reconfig_top_k
+        self._layout_seed = layout_seed
+        self._reconfig_on = dynamic is not None and \
+            system.reconfig_interval > 0
+        if dynamic is not None and hot_index is None:
+            raise ValueError("dynamic mode needs an initial hot_index")
+        if self._reconfig_on and switch_cfg is None:
+            raise ValueError("reconfig_interval > 0 needs switch_cfg "
+                             "(re-placement runs make_layout against it)")
+        if tracker is None and self._reconfig_on and not oracle:
+            tracker = HeatTracker()
+        self.tracker = tracker
+        self._ctl_rng = np.random.default_rng(seed + 0x5EED)
+        self.pause_until = 0.0        # switch unavailable during migration
+        self.reconfigs = 0
+        self.phase_commits = collections.Counter()   # (phase, klass) -> n
         # batched switch admission (see module docstring): per-txn rounds
         # when batch_window=0, max_batch=1 and pipeline_depth=1 — the
         # exact original path.  depth>1 alone still routes hot txns
@@ -208,11 +297,40 @@ class ClusterSim:
         return lk
 
     # ----------------------------------------------------------- worker --
+    def _draw(self, node: int) -> TxnProfile:
+        """Admit one transaction: static mode draws a pre-classified
+        profile; dynamic mode samples the drift generator at the current
+        sim time, feeds the heat tracker, and classifies against the
+        CURRENT hot index (which a reconfiguration may have swapped)."""
+        if self.dynamic is None:
+            return self.profiles[int(self.rng.integers(len(self.profiles)))]
+        txn = self.dynamic.sample(self.rng, self.sim.now, home=node)
+        if self.tracker is not None:
+            self.tracker.observe_trace([(k, o) for o, k, _ in txn.ops])
+        # home from the txn, not the worker: generators may pin a txn to
+        # its data's node (TPC-C homes at the warehouse) — the same
+        # convention the static profile pools use (profile_txn(t, hi,
+        # t.home) in benchmarks/common.py)
+        return profile_txn(txn, self.hot_index, txn.home)
+
+    def _account(self, prof: TxnProfile, t0: float):
+        sim = self.sim
+        self.commits[prof.klass] += 1
+        self.commits["total"] += 1
+        self.commits[prof.kind] += 1
+        dt = sim.now - t0
+        self.lat_sum[prof.klass] += dt
+        self.lat_n[prof.klass] += 1
+        self.lat_sum["all"] += dt
+        self.lat_n["all"] += 1
+        if self.dynamic is not None:
+            ph = self.dynamic.phase_of(sim.now)
+            self.phase_commits[(ph, prof.klass)] += 1
+
     def worker(self, node: int):
         sim, T = self.sim, self.T
-        n_prof = len(self.profiles)
         while True:
-            prof = self.profiles[int(self.rng.integers(n_prof))]
+            prof = self._draw(node)
             t0 = sim.now
             self._ts += 1
             ts = self._ts
@@ -239,13 +357,7 @@ class ClusterSim:
             if not committed:
                 continue
             if sim.now >= self.warmup:
-                self.commits[prof.klass] += 1
-                self.commits["total"] += 1
-                self.commits[prof.kind] += 1
-                self.lat_sum[prof.klass] += sim.now - t0
-                self.lat_n[prof.klass] += 1
-                self.lat_sum["all"] += sim.now - t0
-                self.lat_n["all"] += 1
+                self._account(prof, t0)
 
     def run_txn(self, prof: TxnProfile, ts: int, node: Optional[int] = None):
         node = prof.home if node is None else node
@@ -258,8 +370,11 @@ class ClusterSim:
                 return False
             yield from self.switch_txn(prof, node)
             # commit: 2PC prepare already implicit; switch multicasts the
-            # decision, saving the second round (paper Fig 10)
+            # decision, saving the second round (paper Fig 10) — the
+            # coordinator's NIC only carries the participants' acks
             if len(prof.participants) > 1:
+                yield from self._msg_nic(prof.home,
+                                         max(1, len(prof.participants) - 1))
                 yield ("delay", self.T.t_2pc_round)
             self.release_all(prof, ts)
             return True
@@ -277,6 +392,9 @@ class ClusterSim:
         if len(prof.participants) > 1 or any(
                 n != prof.home for _, n, _ in prof.hot_ops):
             self._charge("commit_2pc", 2 * self.T.t_2pc_round)
+            # prepare + decision bursts serialize on the coordinator's NIC
+            yield from self._msg_nic(prof.home,
+                                     2 * max(1, len(prof.participants) - 1))
             yield ("delay", 2 * self.T.t_2pc_round)
         else:
             self._charge("local_work", self.T.t_commit_local)
@@ -290,14 +408,7 @@ class ClusterSim:
         switch-batcher, resume when its round returns, commit."""
         yield ("join", self.batchers[node], (prof, self.sim.now))
         if self.sim.now >= self.warmup:
-            self.commits[prof.klass] += 1
-            self.commits["total"] += 1
-            self.commits[prof.kind] += 1
-            dt = self.sim.now - t0
-            self.lat_sum[prof.klass] += dt
-            self.lat_n[prof.klass] += 1
-            self.lat_sum["all"] += dt
-            self.lat_n["all"] += 1
+            self._account(prof, t0)
         yield ("release", self.credits[node])
 
     def _nic_xfer(self, node: int, n_pkts: int):
@@ -314,21 +425,58 @@ class ClusterSim:
         yield ("delay", wire)
         yield ("release", self.nics[node])
 
+    def _msg_nic(self, node: int, n_msgs: int):
+        """Cold-path message burst (remote tuple access, 2PC round)
+        through the node's NIC — only with an explicit NIC; otherwise
+        wire time stays folded into rtt_node/t_2pc_round and this yields
+        nothing (zero events, the pre-NIC model)."""
+        if self.sys.nic_line_rate > 0:
+            yield from self._nic_xfer(node, n_msgs)
+
+    def _reconfig_gate(self):
+        """Hold switch traffic while a re-placement epoch has the switch
+        paused.  Yields nothing when no pause is active — with the
+        controller off this is a no-op call, adding zero events."""
+        wait = self.pause_until - self.sim.now
+        if wait > 0:
+            self._charge("reconfig_wait", wait)
+            yield ("delay", wait)
+
+    def _ingress_admit(self, n_pkts: int):
+        """ONE shared ingress pipeline across ALL nodes: admission is
+        bounded at ``switch_service_rate`` packets/s globally, so
+        aggregate hot throughput caps at the switch no matter how many
+        NICs feed it (the Tofino's single-pipeline bound)."""
+        t0 = self.sim.now
+        yield ("acquire", self.ingress)
+        self._charge("switch_ingress_wait", self.sim.now - t0)
+        svc = n_pkts / self.sys.switch_service_rate
+        self._charge("switch_ingress", svc)
+        yield ("delay", svc)
+        yield ("release", self.ingress)
+
     def _switch_round(self, node: int, items):
         """Service one batch: a single switch round (one ``rtt_switch``)
         carrying every member; pipeline occupancy is per-txn ``t_pipe``
         plus the summed recirculations of multipass members under ONE
         pipeline-lock hold.  With ``nic_line_rate > 0`` the round also
         pays TX wire time before flight and RX wire time after, each
-        under the node's exclusive NIC resource."""
+        under the node's exclusive NIC resource; with
+        ``switch_service_rate > 0`` the request burst additionally queues
+        at the shared switch ingress."""
         T = self.T
+        # gather delay measured up to the gate: a migration pause is
+        # charged once (reconfig_wait), not again per member as batch_wait
         t_start = self.sim.now
+        yield from self._reconfig_gate()
         for _, t_join in items:
             self._charge("batch_wait", t_start - t_join)
         self._charge("switch", T.rtt_switch)
         if self.sys.nic_line_rate > 0:
             yield from self._nic_xfer(node, len(items))       # TX burst
         yield ("delay", T.rtt_switch / 2)
+        if self.sys.switch_service_rate > 0:
+            yield from self._ingress_admit(len(items))
         base = T.t_pipe * len(items)
         rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
         extra = sum((p.passes - 1) * rc for p, _ in items if p.passes > 1)
@@ -350,10 +498,13 @@ class ClusterSim:
     def switch_txn(self, prof: TxnProfile, node: Optional[int] = None):
         T = self.T
         node = prof.home if node is None else node
+        yield from self._reconfig_gate()
         self._charge("switch", T.rtt_switch)
         if self.sys.nic_line_rate > 0:
             yield from self._nic_xfer(node, 1)                # TX
         yield ("delay", T.rtt_switch / 2)
+        if self.sys.switch_service_rate > 0:
+            yield from self._ingress_admit(1)
         if prof.passes == 1:
             yield ("delay", T.t_pipe)
         else:
@@ -395,7 +546,9 @@ class ClusterSim:
                 yield ("delay", T.t_local_op)
             else:
                 self._charge("remote_access", T.rtt_node)
+                yield from self._msg_nic(prof.home, 1)   # request TX
                 yield ("delay", T.rtt_node)
+                yield from self._msg_nic(prof.home, 1)   # response RX
             if hot or self._contended(key):
                 t0 = self.sim.now
                 granted = yield ("lock", self.lock_of(key), mode, ts)
@@ -419,6 +572,61 @@ class ClusterSim:
             if lk is not None:
                 lk.release(ts, self.sim)
 
+    # -------------------------------------------- adaptive re-placement --
+    def _controller(self):
+        """Epoch controller: periodically re-place the hot set.  The
+        tracker-driven (adaptive) controller fires every
+        ``reconfig_interval`` seconds and estimates the hot set from
+        observed accesses; the oracle fires AT each drift-phase boundary
+        and reads the generator's ground truth — the per-epoch upper
+        bound adaptive placement is judged against."""
+        interval = self.sys.reconfig_interval
+        period = getattr(self.dynamic, "period", None)
+        while True:
+            if self.oracle and period:
+                nxt = (int(self.sim.now / period) + 1) * period
+                yield ("delay", max(nxt - self.sim.now, 1e-9))
+            else:
+                yield ("delay", interval)
+            new_hi = self._recompute_placement()
+            if new_hi is None:
+                continue
+            if set(new_hi.placement.slot) == \
+                    set(self.hot_index.placement.slot):
+                # hot-set membership unchanged: nothing to migrate, no
+                # switch pause — steady-state epochs are free, so a short
+                # interval tracks drift without constant downtime
+                continue
+            # the migration pauses the switch: drain + register
+            # copy-out/copy-in + replicated index swap (t_reconfig)
+            self.pause_until = self.sim.now + self.T.t_reconfig
+            self._charge("reconfig", self.T.t_reconfig)
+            yield ("delay", self.T.t_reconfig)
+            self.hot_index = new_hi
+            self.reconfigs += 1
+
+    def _recompute_placement(self) -> Optional[HotIndex]:
+        k = self.reconfig_top_k
+        if k is None:
+            k = len(self.hot_index.placement.slot)
+        if self.switch_cfg is not None:
+            k = min(k, self.switch_cfg.total_slots)
+        if self.oracle:
+            txns = [self.dynamic.sample(self._ctl_rng, self.sim.now,
+                                        home=i % self.n_nodes)
+                    for i in range(512)]
+            traces = [[(kk, o) for o, kk, _ in t.ops] for t in txns]
+            hot = self.dynamic.hot_keys_at(self.sim.now)[:k]
+        else:
+            traces = self.tracker.window_traces()
+            hot = self.tracker.top_k(k)
+            self.tracker.advance_epoch()
+        placement = layout_for_hotset(traces, hot, self.switch_cfg,
+                                      seed=self._layout_seed)
+        if not placement.slot:
+            return None
+        return HotIndex(placement)
+
     # --------------------------------------------------------------- run --
     def run(self):
         self.sim = Sim()
@@ -429,10 +637,13 @@ class ClusterSim:
         self.credits = [Resource(self.hot_credits)
                         for _ in range(self.n_nodes)]
         self.nics = [Resource(1) for _ in range(self.n_nodes)]
+        self.ingress = Resource(1)               # shared switch ingress
         for node in range(self.n_nodes):
             for w in range(self.wpn):
                 g = self.worker(node)
                 self.sim.spawn(g, delay=float(self.rng.random() * 1e-6))
+        if self._reconfig_on:
+            self.sim.spawn(self._controller())
         self.sim.run(self.sim_time)
         window = self.sim_time - self.warmup
         tput = self.commits["total"] / window
@@ -444,4 +655,26 @@ class ClusterSim:
                    if self.rounds else 0.0)
         for k in self.lat_n:
             out[f"lat_{k}"] = self.lat_sum[k] / max(self.lat_n[k], 1)
+        if self.dynamic is not None:
+            # dynamic-mode keys only — the static result dict must stay
+            # byte-identical to the golden pins
+            out["reconfigs"] = self.reconfigs
+            out["hot_rate"] = self.commits["hot"] / window
+            # warm txns also ride the switch (their hot sub-txn); on
+            # workloads that are warm-by-construction (TPC-C: every txn
+            # has cold rows) switch_rate is the drift-sensitive metric
+            out["switch_rate"] = (self.commits["hot"] +
+                                  self.commits["warm"]) / window
+            phases: Dict[int, Dict[str, int]] = {}
+            for (ph, kl), c in sorted(self.phase_commits.items()):
+                d = phases.setdefault(ph, {"total": 0})
+                d[kl] = d.get(kl, 0) + c
+                d["total"] += c
+            out["phase_commits"] = phases
+            out["phase_hot_rate"] = {
+                ph: d.get("hot", 0) / max(d["total"], 1)
+                for ph, d in phases.items()}
+            out["phase_switch_rate"] = {
+                ph: (d.get("hot", 0) + d.get("warm", 0)) / max(d["total"], 1)
+                for ph, d in phases.items()}
         return out

@@ -1,0 +1,292 @@
+"""Adaptive hot-set management (functional layer): heat tracking, drift
+generators, epoch re-placement + switch migration, and the two ISSUE-4
+contracts — (a) controller disabled => byte-identical behavior to a plain
+cluster, (b) recovery replays correctly across a migration boundary."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.heat import CountMinSketch, HeatTracker
+from repro.core.hotset import build_hot_index
+from repro.core.packets import READ, SwitchConfig
+from repro.db.dbms import Cluster
+from repro.db.migrate import EpochController, diff_placements
+from repro.db.txn import node_of
+from repro.core.layout import Placement
+from repro.workloads import drift
+
+SW = SwitchConfig(n_stages=16, regs_per_stage=512, max_instrs=16)
+N_NODES = 4
+
+
+def small_shift(**kw):
+    p = dict(n_nodes=N_NODES, keys_per_node=2000, hot_per_node=16,
+             n_blocks=4, p_hot_txn=0.9)
+    p.update(kw)
+    return drift.YCSBHotspotShift(**p)
+
+
+def _txn_key(t):
+    return (t.kind, t.home, tuple(t.ops))
+
+
+# ------------------------------------------------------ drift generators --
+
+@pytest.mark.parametrize("mk", [
+    lambda: small_shift(),
+    lambda: drift.RotatingZipf(n_nodes=N_NODES, keys_per_node=1000,
+                               hot_per_node=16),
+    lambda: drift.TPCCWarehouseRotation(n_nodes=N_NODES, n_warehouses=8,
+                                        active=2),
+], ids=["ycsb_shift", "rotating_zipf", "tpcc_rotation"])
+def test_drift_generators_deterministic(mk):
+    """Same seed => same transaction stream (keys, ops, homes, kinds),
+    across fresh generator instances and across phases."""
+    for phase in (0, 1, 3):
+        a = mk().sample_phase(np.random.default_rng(7), phase, 120)
+        b = mk().sample_phase(np.random.default_rng(7), phase, 120)
+        assert [_txn_key(t) for t in a] == [_txn_key(t) for t in b]
+    c = mk().sample_phase(np.random.default_rng(8), 0, 120)
+    a = mk().sample_phase(np.random.default_rng(7), 0, 120)
+    assert [_txn_key(t) for t in a] != [_txn_key(t) for t in c]
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: small_shift(),
+    lambda: drift.RotatingZipf(n_nodes=N_NODES, keys_per_node=1000,
+                               hot_per_node=16),
+    lambda: drift.TPCCWarehouseRotation(n_nodes=N_NODES, n_warehouses=8,
+                                        active=2),
+], ids=["ycsb_shift", "rotating_zipf", "tpcc_rotation"])
+def test_drift_moves_the_hot_set(mk):
+    g = mk()
+    h0 = set(g.hot_keys_at(0.0))
+    h1 = set(g.hot_keys_at(g.period))
+    assert h0 and h1 and h0 != h1
+    # phase load actually concentrates on the declared hot keys
+    txns = g.sample_phase(np.random.default_rng(0), 1, 300)
+    accessed = [k for t in txns for k in t.keys()]
+    frac = sum(k in h1 for k in accessed) / len(accessed)
+    assert frac > 0.3
+    assert g.phase_of(0.0) == 0 and g.phase_of(g.period * 2.5) == 2
+
+
+# ---------------------------------------------------------- heat tracker --
+
+def test_tracker_topk_follows_drift_after_decay():
+    g = small_shift()
+    tr = HeatTracker(window=512, decay=0.2)
+    for t in g.sample_phase(np.random.default_rng(0), 0, 400):
+        tr.observe_trace([(k, o) for o, k, _ in t.ops])
+    hot0 = set(g.hot_keys_at(0.0))
+    top = set(tr.top_k(len(hot0)))
+    assert len(top & hot0) / len(hot0) > 0.9
+    probe = next(iter(hot0))
+    before = tr.heat(probe)
+    assert before > 0
+    tr.advance_epoch()
+    assert tr.heat(probe) == pytest.approx(before * tr.decay)
+    for t in g.sample_phase(np.random.default_rng(1), 1, 400):
+        tr.observe_trace([(k, o) for o, k, _ in t.ops])
+    hot1 = set(g.hot_keys_at(g.period))
+    top = set(tr.top_k(len(hot1)))
+    assert len(top & hot1) / len(hot1) > 0.9
+
+
+def test_tracker_deterministic_topk_ties_by_key():
+    tr = HeatTracker()
+    for k in (9, 3, 7, 5):
+        tr.observe_trace([(k, READ)])
+    assert tr.top_k(2) == [3, 5]        # equal heat -> ascending key
+
+
+def test_count_min_sketch_never_undercounts_and_tracks_heavy_hitters():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 10_000, 5000)
+    keys = np.concatenate([keys, np.full(500, 42), np.full(300, 7)])
+    cms = CountMinSketch(width=4096, depth=4)
+    cms.add(keys)
+    truth = {k: int((keys == k).sum()) for k in (42, 7, 3)}
+    for k, true in truth.items():
+        est = cms.estimate([k])[0]
+        assert est >= true                      # upper bound
+        assert est <= true + 50                 # tight for this load
+    cms.scale(0.5)
+    assert cms.estimate([42])[0] >= truth[42] * 0.5 - 1e-9
+
+
+def test_tracker_sketch_mode_matches_exact_on_heavy_hitters():
+    g = small_shift()
+    txns = g.sample_phase(np.random.default_rng(3), 0, 400)
+    exact = HeatTracker(window=512)
+    sk = HeatTracker(window=512, sketch=CountMinSketch(width=8192, depth=4))
+    for t in txns:
+        tr = [(k, o) for o, k, _ in t.ops]
+        exact.observe_trace(tr)
+        sk.observe_trace(tr)
+    k = 16 * N_NODES
+    assert set(exact.top_k(k)) == set(sk.top_k(k))
+
+
+# ------------------------------------------------- controller + migration --
+
+def _adaptive_cluster(gen, interval, seed=0, window=1024):
+    hi = build_hot_index(
+        drift.traces(gen.sample_phase(np.random.default_rng(seed), 0, 800)),
+        16 * N_NODES, SW)
+    c = Cluster(N_NODES, SW, hi, use_switch=True)
+    for k in gen.hot_keys_at(0.0):
+        c.load(k, 5)
+    c.snapshot_offload()
+    tr = HeatTracker(window=window, decay=0.2)
+    ctl = EpochController(c, tr, interval=interval, top_k=16 * N_NODES)
+    return c, ctl
+
+
+def _value(c, k):
+    if c.use_switch and c.hot_index.is_hot(k):
+        s, r = c.hot_index.slot(k)
+        return int(np.asarray(c.switch.registers)[s, r])
+    return c.nodes[node_of(k)].store[k]
+
+
+def _workload(gen, phases=(0, 0, 1, 1), n=300):
+    out = []
+    for i, ph in enumerate(phases):
+        out.append(gen.sample_phase(np.random.default_rng(10 + i), ph, n))
+    return out
+
+
+def test_migration_preserves_every_tuple_value():
+    """The migrated cluster's final logical state equals a no-switch
+    replay of the same transactions — evicted values really made it back
+    to node stores and loaded values really came from them."""
+    gen = small_shift()
+    c, ctl = _adaptive_cluster(gen, interval=200)
+    batches = _workload(gen)
+    for b in batches:
+        c.run_batch([copy.deepcopy(t) for t in b])
+    assert c.stats["migrations"] >= 1
+    ref = Cluster(N_NODES, SW, None, use_switch=False)
+    for k in gen.hot_keys_at(0.0):
+        ref.load(k, 5)
+    for b in batches:
+        for t in b:
+            ref.run(copy.deepcopy(t))
+    keys = {k for b in batches for t in b for k in t.keys()}
+    for k in keys:
+        assert _value(c, k) == _value(ref, k), k
+
+
+def test_migration_reclassifies_drifted_txns_hot():
+    gen = small_shift()
+    c, ctl = _adaptive_cluster(gen, interval=200)
+    c.run_batch(gen.sample_phase(np.random.default_rng(1), 0, 300))
+    hot_before = c.stats["hot"]
+    c.run_batch(gen.sample_phase(np.random.default_rng(2), 1, 600))
+    # after the controller catches up, phase-1 hot txns run on the switch
+    assert c.stats["hot"] - hot_before > 150
+    hot1 = gen.hot_keys_at(gen.period)
+    assert all(c.hot_index.is_hot(k) for k in hot1[:8])
+    # the replicated copies swapped atomically with the coordinator's
+    assert all(n.hot_index is c.hot_index for n in c.nodes)
+
+
+def test_controller_disabled_is_byte_identical_to_plain_cluster():
+    """interval=0: tracker observes, controller never fires — results,
+    stats, registers and WALs are identical to a cluster without the
+    subsystem (the ISSUE-4 regression pin)."""
+    gen = small_shift()
+    batches = _workload(gen, phases=(0, 1))
+
+    def build(adaptive):
+        hi = build_hot_index(
+            drift.traces(gen.sample_phase(np.random.default_rng(0), 0, 800)),
+            16 * N_NODES, SW)
+        c = Cluster(N_NODES, SW, hi, use_switch=True)
+        for k in gen.hot_keys_at(0.0):
+            c.load(k, 5)
+        c.snapshot_offload()
+        if adaptive:
+            EpochController(c, HeatTracker(), interval=0)
+        return c
+
+    a, b = build(True), build(False)
+    ra = [a.run_batch([copy.deepcopy(t) for t in bt]) for bt in batches]
+    rb = [b.run_batch([copy.deepcopy(t) for t in bt]) for bt in batches]
+    assert ra == rb
+    assert a.stats == b.stats
+    np.testing.assert_array_equal(np.asarray(a.switch.registers),
+                                  np.asarray(b.switch.registers))
+    for na, nb in zip(a.nodes, b.nodes):
+        assert [(e.kind, e.tid, e.payload) for e in na.wal] == \
+               [(e.kind, e.tid, e.payload) for e in nb.wal]
+
+
+def test_switch_recovery_across_migration_boundary():
+    """Crash the switch AFTER a migration: recovery must replay only the
+    post-migration sends against the migration checkpoint and reproduce
+    the registers exactly (the Fig-9 argument, extended across epochs)."""
+    gen = small_shift()
+    c, ctl = _adaptive_cluster(gen, interval=200)
+    for b in _workload(gen):
+        c.run_batch(b)
+    assert c.stats["migrations"] >= 1
+    before = np.asarray(c.switch.registers).copy()
+    known, unknown = c.crash_switch_and_recover()
+    np.testing.assert_array_equal(before, np.asarray(c.switch.registers))
+    assert known > 0
+
+
+def test_switch_recovery_with_inflight_txn_after_migration():
+    """An in-flight (result-less) send logged after the last migration is
+    gap-filled by recovery; sends from before the migration stay out of
+    the replay."""
+    gen = small_shift()
+    c, ctl = _adaptive_cluster(gen, interval=150)
+    for b in _workload(gen, phases=(0, 1)):
+        c.run_batch(b)
+    assert c.stats["migrations"] >= 1
+    # one more hot txn, then lose its result entry (crash mid-flight)
+    hot1 = gen.hot_keys_at(gen.period)
+    t = None
+    for cand in gen.sample_phase(np.random.default_rng(99), 1, 200):
+        if c.classify(cand) == "hot":
+            t = cand
+            break
+    assert t is not None
+    c.run(t)
+    node = c.nodes[t.home]
+    assert node.wal[-1].kind == "switch_result"
+    node.wal = node.wal[:-1]
+    before = np.asarray(c.switch.registers).copy()
+    known, unknown = c.crash_switch_and_recover()
+    assert unknown == 1
+    np.testing.assert_array_equal(before, np.asarray(c.switch.registers))
+
+
+def test_node_crash_recovery_replays_migration_writebacks():
+    """Values evicted to a node's store by a migration must survive a
+    node crash: the writeback is WAL-logged under the migration tid."""
+    gen = small_shift()
+    c, ctl = _adaptive_cluster(gen, interval=200)
+    for b in _workload(gen):
+        c.run_batch(b)
+    assert c.stats["migrations"] >= 1
+    for nid in range(N_NODES):
+        snap = dict(c.nodes[nid].store)
+        c.crash_node_and_recover(nid)
+        for k, v in snap.items():
+            assert c.nodes[nid].store.get(k, 0) == v, (nid, k)
+
+
+def test_diff_placements_partitions_changes():
+    old = Placement({1: (0, 0), 2: (0, 1), 3: (1, 0)})
+    new = Placement({2: (0, 1), 3: (2, 0), 4: (1, 1)})
+    plan = diff_placements(old, new)
+    assert [k for k, _ in plan.evict] == [1]
+    assert [k for k, _ in plan.load] == [4]
+    assert [(k, o, n) for k, o, n in plan.moved] == [(3, (1, 0), (2, 0))]
+    assert plan.stay == 1
+    assert plan.n_changed == 3

@@ -54,6 +54,37 @@ def test_optimal_beats_random_layout(seed):
     assert opt.stats["single_pass_rate"] == 1.0
 
 
+def test_over_capacity_hot_set_raises_not_truncates():
+    sw = SwitchConfig(n_stages=2, regs_per_stage=4, max_instrs=4)  # 8 slots
+    traces = [[(i, READ)] for i in range(9)]
+    with np.testing.assert_raises_regex(ValueError, "exceeds switch"):
+        make_layout(traces, sw)
+    with np.testing.assert_raises_regex(ValueError, "exceeds switch"):
+        random_layout(traces, sw)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 1000))
+def test_capacity_property_fits_iff_within_register_file(n_tuples, seed):
+    """Any hot set <= n_stages*regs_per_stage places every tuple within
+    capacity (unique in-range slots, both layouts); anything larger
+    raises a clear error."""
+    sw = SwitchConfig(n_stages=3, regs_per_stage=8, max_instrs=4)
+    rng = np.random.default_rng(seed)
+    traces = [[(int(rng.integers(n_tuples)), READ)] for _ in range(60)]
+    ids = {t for tr in traces for t, _ in tr}
+    for fn in (make_layout, random_layout):
+        if len(ids) > sw.total_slots:
+            with np.testing.assert_raises_regex(ValueError, "capacity"):
+                fn(traces, sw, seed=seed)
+            continue
+        pl = fn(traces, sw, seed=seed)
+        assert set(pl.slot) == ids
+        assert len(set(pl.slot.values())) == len(pl.slot)
+        for s, r in pl.slot.values():
+            assert 0 <= s < sw.n_stages and 0 <= r < sw.regs_per_stage
+
+
 def test_single_pass_reorderable_vs_dependent():
     pl = Placement({1: (3, 0), 2: (1, 0)})
     # reorderable (two reads) -> distinct stages is enough

@@ -19,6 +19,7 @@ to artifacts/bench/.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import sys
 import time
@@ -376,6 +377,47 @@ def bench_adaptive(fast=True):
              rows)
 
 
+# ------------------------------------------------------------ summary ----
+# every BENCH_*.json artifact at the repo root and where its headline
+# ratio lives — the one-table trajectory view of the repo's PRs
+SUMMARY_HEADLINES = [
+    ("BENCH_batch.json", ("headline_ycsb_a_hot256", "speedup"),
+     "batched vs per-txn switch dispatch (functional, PR 1)"),
+    ("BENCH_sim_batch.json", ("headline_allhot_speedup",),
+     "batched switch admission vs per-txn (timing sim, PR 2)"),
+    ("BENCH_sim_pipeline.json", ("headline_pipelined_speedup",),
+     "pipelined switch rounds vs per-txn (timing sim, PR 3)"),
+    ("BENCH_adaptive.json", ("headline_adaptive_vs_oracle",),
+     "adaptive vs oracle hot rate under drift (PR 4)"),
+    ("BENCH_hotpath.json", ("headline_async_speedup",),
+     "async hot path vs the PR 1 batched path (functional, PR 5)"),
+]
+
+
+def bench_summary():
+    """Collate the headline ratio of every BENCH_*.json into one
+    trajectory table (stdout + artifacts/bench/summary_trajectory.csv).
+    Missing artifacts are reported, not fatal — regenerate them with the
+    commands in the README bench table."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    rows = []
+    print(f"{'artifact':25s} {'headline':>9s}  meaning")
+    for fname, path, desc in SUMMARY_HEADLINES:
+        try:
+            with open(os.path.join(root, fname)) as f:
+                v = json.load(f)
+            for k in path:
+                v = v[k]
+            val = f"{v:.2f}x"
+        except (FileNotFoundError, KeyError, json.JSONDecodeError):
+            v, val = "", "missing"
+        rows.append([fname, ".".join(path), v, desc])
+        print(f"{fname:25s} {val:>9s}  {desc}")
+    save_csv("summary_trajectory",
+             ["artifact", "metric", "value", "meaning"], rows)
+    return rows
+
+
 def engine_micro():
     """Switch-engine execution modes on one batch (functional layer)."""
     import jax
@@ -414,7 +456,13 @@ def main() -> None:
                     "CSVs to artifacts/bench/.")
     ap.add_argument("--full", action="store_true",
                     help="full sweep grids (default: fast subsets)")
+    ap.add_argument("--summary", action="store_true",
+                    help="only collate the headline ratio of every "
+                         "BENCH_*.json artifact into one trajectory table")
     args = ap.parse_args()
+    if args.summary:
+        bench_summary()
+        return
     fast = not args.full
     t0 = time.time()
     fig11_ycsb(fast)
@@ -429,6 +477,7 @@ def main() -> None:
     bench_sim_pipeline(fast)
     bench_adaptive(fast)
     engine_micro()
+    bench_summary()
     save_csv("summary", ["name", "us_per_call", "derived"], ROWS)
     print(f"# benchmarks done in {time.time() - t0:.0f}s "
           f"({len(ROWS)} rows) -> artifacts/bench/")

@@ -45,7 +45,16 @@ packets, not one per transaction.  ``execute_batch`` is that path:
     (no jit dispatch/tracing machinery on the hot path);
   * the register buffer is donated to the compiled call, so on TPU the
     update is in-place rather than a copy of the full [S, R] register
-    file per batch.
+    file per batch;
+  * a group crosses host -> device as ONE fused staging buffer (pooled
+    ``PacketStager``), and the compiled call gathers the device-only
+    result rows into a compact array, so a drain ships M values instead
+    of the full B*K result plane (result compaction);
+  * ``execute_batch`` returns an opaque ``PendingBatch`` handle — a
+    lazy result plane; with ``async_dispatch`` + ``defer=True`` the
+    compiled call runs on a single-worker dispatch thread (XLA releases
+    the GIL), overlapping device execution with the caller's next
+    packet build while preserving FIFO admission order.
 
 Engine-mode dispatch rules (``mode="auto"``):
 
@@ -63,6 +72,7 @@ rejects ADDP.
 """
 from __future__ import annotations
 
+import collections
 import warnings
 from typing import Dict, Optional, Tuple
 
@@ -71,7 +81,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
-                                SwitchConfig)
+                                N_PLANES, PacketStager, SwitchConfig,
+                                result_plane)
 
 
 def init_registers(cfg: SwitchConfig, values: Optional[np.ndarray] = None):
@@ -211,24 +222,41 @@ _ENGINE_IMPLS = {"serial": _serial_engine_impl,
                  "staged": _staged_engine_impl,
                  "affine": _affine_engine_impl}
 
-# (mode, S, R, B, K) -> AOT-compiled executable.  jax.jit would also cache
-# per shape, but calling a compiled executable directly skips the dispatch
-# path (tracing-cache lookup, argument canonicalization) entirely — that
-# overhead is exactly what dominates B=1 switch calls on CPU/TPU.
+# (mode, S, R, Bp, K, Mp) -> AOT-compiled executable.  jax.jit would also
+# cache per shape, but calling a compiled executable directly skips the
+# dispatch path (tracing-cache lookup, argument canonicalization) entirely —
+# that overhead is exactly what dominates B=1 switch calls on CPU/TPU.
 _DISPATCH_CACHE: Dict[tuple, object] = {}
 
 
-def _compiled_engine(mode: str, S: int, R: int, B: int, K: int):
-    key = (mode, S, R, B, K)
+def _fused_engine_impl(mode: str, Mp: int):
+    """Wrap an engine impl to (a) consume the single fused [N_PLANES, Bp, K]
+    staging buffer (one H2D transfer per group instead of four) and (b)
+    emit the compacted device-only result rows alongside the full plane —
+    all inside ONE compiled dispatch."""
+    impl = _ENGINE_IMPLS[mode]
+
+    def run(registers, fused):
+        op, stage, reg, val = fused[0], fused[1], fused[2], fused[3]
+        idx = fused[4].reshape(-1)[:Mp]
+        regs, res, ok = impl(registers, op, stage, reg, val)
+        compact = jnp.take(res.reshape(-1), idx, mode="clip")
+        return regs, res, ok, compact
+
+    return run
+
+
+def _compiled_engine(mode: str, S: int, R: int, B: int, K: int, M: int):
+    key = (mode, S, R, B, K, M)
     fn = _DISPATCH_CACHE.get(key)
     if fn is None:
-        spec = jax.ShapeDtypeStruct((B, K), jnp.int32)
         with warnings.catch_warnings():
             # register donation is a no-op on CPU; silence the advisory
             warnings.filterwarnings("ignore", message="Some donated buffers")
-            fn = jax.jit(_ENGINE_IMPLS[mode], donate_argnums=0).lower(
+            fn = jax.jit(_fused_engine_impl(mode, M),
+                         donate_argnums=0).lower(
                 jax.ShapeDtypeStruct((S, R), jnp.int32),
-                spec, spec, spec, spec).compile()
+                jax.ShapeDtypeStruct((N_PLANES, B, K), jnp.int32)).compile()
         _DISPATCH_CACHE[key] = fn
     return fn
 
@@ -239,6 +267,73 @@ def _bucket(b: int) -> int:
     return 1 if b <= 1 else 1 << (b - 1).bit_length()
 
 
+class PendingBatch:
+    """Opaque handle to one dispatched batch — the async hot path's unit
+    of in-flight work.
+
+    Device-resident outputs stay on device: ``res`` (full [Bp, K] result
+    plane), ``ok`` (success flags) and ``compact`` (the gathered
+    device-only result rows).  Host-side metadata — ``base`` (the
+    host-derivable results: WRITE echoes, NOP zeros), ``idx`` (flat
+    positions of the gathered rows) and ``gids`` — is available
+    immediately.  A deferred dispatch carries a future instead of arrays
+    until resolved; either way nothing crosses device -> host until
+    ``results_np()`` runs, and that transfer ships only the M compacted
+    values, not the whole B*K plane.
+
+    Iteration yields ``(results[:B], ok[:B], gids)`` device slices, so
+    legacy ``res, ok, gids = engine.execute_batch(...)`` unpacking keeps
+    working unchanged."""
+
+    __slots__ = ("res", "ok", "compact", "gids", "B", "K", "base", "idx",
+                 "mode", "_fut", "_res_np")
+
+    def __init__(self, res, ok, compact, gids, B, K, base, idx,
+                 mode="auto", fut=None):
+        self.res, self.ok, self.compact = res, ok, compact
+        self.gids, self.B, self.K = gids, B, K
+        self.base, self.idx, self.mode = base, idx, mode
+        self._fut = fut
+        self._res_np = None
+
+    def _resolve(self):
+        """Join the dispatch thread's future (deferred handles only)."""
+        if self._fut is not None:
+            _, self.res, self.ok, self.compact = self._fut.result()
+            self._fut = None
+
+    def results_np(self) -> np.ndarray:
+        """Materialize the [B, K] result plane on host: the host-known
+        base overlaid with the compacted device gather (cached)."""
+        if self._res_np is None:
+            self._resolve()
+            out = self.base.copy()
+            if len(self.idx):
+                out.reshape(-1)[self.idx] = \
+                    np.asarray(self.compact)[:len(self.idx)]
+            self._res_np = out
+        return self._res_np
+
+    def ok_np(self) -> np.ndarray:
+        self._resolve()
+        return np.asarray(self.ok)[:self.B]
+
+    def block(self):
+        """Barrier: wait for this dispatch's device work to finish."""
+        self._resolve()
+        jax.block_until_ready((self.res, self.ok, self.compact))
+        return self
+
+    def ready(self) -> bool:
+        return self._res_np is not None
+
+    def __iter__(self):
+        self._resolve()
+        yield self.res[:self.B]
+        yield self.ok[:self.B]
+        yield self.gids
+
+
 class SwitchEngine:
     """Functional switch: holds register state on device, executes packet
     batches in serial-equivalent order, assigns GIDs.
@@ -247,11 +342,64 @@ class SwitchEngine:
     the batched DBMS hot path commits a whole group of hot transactions in
     exactly one."""
 
-    def __init__(self, cfg: SwitchConfig, registers=None):
+    def __init__(self, cfg: SwitchConfig, registers=None,
+                 stager_pool: int = 4, async_dispatch: bool = False):
         self.cfg = cfg
         self.registers = init_registers(cfg, registers)
         self.next_gid = 0
         self.dispatch_count = 0
+        # reusable host staging buffers (one fused H2D per dispatch); the
+        # pool must stay deeper than the caller's async in-flight window
+        self._stager = PacketStager(pool=stager_pool)
+        # async dispatch: a single-worker thread owns all device calls
+        # (XLA releases the GIL during execution, so group k's compute
+        # genuinely overlaps the host building group k+1); one worker =
+        # FIFO = the switch's serial admission order is preserved
+        self.async_dispatch = bool(async_dispatch)
+        self._pool = None
+        self._last_fut = None
+        self._defer_futs = collections.deque()   # submitted, not yet run
+
+    # ------------------------------------------------ dispatch thread --
+    def _submit(self, job, defer: bool):
+        """Run ``job`` inline (sync engine), or on the dispatch thread.
+        Returns (outputs, future): exactly one is non-None; ``defer``
+        asks for the future, otherwise the call blocks for outputs.
+
+        Backpressure: a staging buffer may only be recycled after the
+        job reading it has executed, so outstanding deferred jobs are
+        bounded to the stager pool depth — the oldest is joined before a
+        submit that would overflow it.  This enforces the pool contract
+        for DIRECT engine users too (the Cluster's in-flight window is
+        sized to never hit it)."""
+        if not self.async_dispatch:
+            return job(), None
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="switch-dispatch")
+        fut = self._pool.submit(job)
+        self._last_fut = fut
+        if defer:
+            self._defer_futs.append(fut)
+            while len(self._defer_futs) > self._stager.pool - 2:
+                self._defer_futs.popleft().result()
+            return None, fut
+        out = fut.result()      # FIFO worker: every earlier job is done
+        self._defer_futs.clear()
+        return out, None
+
+    def _join(self):
+        """Wait for every submitted dispatch to finish (register state is
+        only host-readable at a quiescent point).  EVERY outstanding
+        future is joined, not just the last: a failed dispatch re-raises
+        here — GIDs/WAL accounting already advanced at submit, so
+        silently returning stale registers would let the two diverge."""
+        while self._defer_futs:
+            self._defer_futs.popleft().result()
+        if self._last_fut is not None:
+            fut, self._last_fut = self._last_fut, None
+            fut.result()
 
     @staticmethod
     def _resolve_mode(mode: str, has_cadd: bool, has_addp: bool,
@@ -278,23 +426,35 @@ class SwitchEngine:
         """Execute a batch (serial order = batch order).
 
         Returns (results [B,K], success [B,K], gids [B]) on host."""
-        res, ok, gids = self.execute_batch(pkts, meta=None, mode=mode)
-        return np.asarray(res), np.asarray(ok), gids
+        pb = self.execute_batch(pkts, meta=None, mode=mode)
+        return pb.results_np(), np.asarray(pb.ok_np()), pb.gids
 
     def execute_batch(self, pkts: Dict[str, np.ndarray],
-                      meta: Optional[dict] = None, mode: str = "auto"
-                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                      meta: Optional[dict] = None, mode: str = "auto",
+                      defer: bool = False) -> PendingBatch:
         """The batched hot path: execute all B packets in one device
-        dispatch (serial order = batch order).
+        dispatch (serial order = batch order) and return an opaque
+        ``PendingBatch`` handle WITHOUT forcing materialization.
 
-        ``meta`` is the opcode-presence metadata from
+        ``meta`` is the opcode-presence (+ result-plane) metadata from
         ``packets.build_packets``; when given, no host-side re-scan of the
-        op array is needed to pick the execution mode.  The batch dimension
-        is padded to a power-of-two bucket with NOP rows; GIDs are assigned
-        to the B real packets only.
+        op arrays is needed.  The batch dimension is padded to a
+        power-of-two bucket with NOP rows and the whole group crosses H2D
+        as ONE fused staging buffer; GIDs are assigned to the B real
+        packets only.  The compiled call also gathers the device-only
+        result rows (everything but WRITE echoes / NOP zeros) into a
+        compact array, so draining the handle ships M values to host
+        instead of B*K.
 
-        Returns (results [B,K], success [B,K], gids [B]); results/success
-        are device arrays (convert once per batch, not per txn)."""
+        With ``defer=True`` on an ``async_dispatch`` engine the compiled
+        call runs on the engine's dispatch thread (XLA releases the GIL,
+        so device compute overlaps the caller's next packet build) and
+        the handle carries a future; GIDs and dispatch accounting are
+        still assigned synchronously, so admission order is untouched.
+
+        The handle unpacks as ``(results [B,K], success [B,K], gids [B])``
+        device arrays for legacy callers; ``results_np()`` is the lazy
+        drain."""
         op_np = np.asarray(pkts["op"], np.int32)
         B, K = op_np.shape
         if meta is None:
@@ -304,39 +464,64 @@ class SwitchEngine:
                                   meta["addp_unsafe"])
         gids = np.arange(self.next_gid, self.next_gid + B, dtype=np.int64)
         if B == 0:
-            return (np.zeros((0, K), np.int32), np.zeros((0, K), bool), gids)
+            return PendingBatch(np.zeros((0, K), np.int32),
+                                np.zeros((0, K), bool),
+                                np.zeros(0, np.int32), gids, 0, K,
+                                np.zeros((0, K), np.int32),
+                                np.zeros(0, np.int32), mode)
 
+        base = meta.get("res_base")
+        idx = meta.get("gather_idx")
+        if base is None or idx is None:
+            base, idx = result_plane(pkts)
         Bp = _bucket(B)
-        pad = ((0, Bp - B), (0, 0))
-
-        def dev(x):
-            a = np.asarray(x, np.int32)
-            return jnp.asarray(np.pad(a, pad) if Bp != B else a)
-
-        op = dev(op_np)
-        stage = dev(pkts["stage"])
-        reg = dev(pkts["reg"])
-        val = dev(pkts["operand"])
+        Mp = min(_bucket(max(len(idx), 1)), Bp * K)
+        # staged on the host thread (the packet arrays may be reused by
+        # the caller); the job reads self.registers AT EXECUTION time on
+        # the dispatch thread, chaining register state in FIFO order
+        staged = self._stager.stage(pkts, idx, Bp, Mp)
+        S, R = self.cfg.n_stages, self.cfg.regs_per_stage
         if mode == "pallas":
-            from repro.kernels.switch_txn import ops as ktx
-            regs, res, ok = ktx.switch_exec(self.registers, op, stage, reg,
-                                            val)
+            def job():
+                from repro.kernels.switch_txn import ops as ktx
+                # jnp.array (copy=True): the staging buffer is recycled,
+                # so the device buffer must never alias host memory
+                fused = jnp.array(staged)
+                regs, res, ok = ktx.switch_exec(self.registers, fused[0],
+                                                fused[1], fused[2],
+                                                fused[3])
+                compact = ktx.gather_results(res,
+                                             fused[4].reshape(-1)[:Mp])
+                self.registers = regs
+                return regs, res, ok, compact
         else:
-            S, R = self.registers.shape
-            fn = _compiled_engine(mode, S, R, Bp, K)
-            regs, res, ok = fn(self.registers, op, stage, reg, val)
+            fn = _compiled_engine(mode, S, R, Bp, K, Mp)
+
+            def job():
+                fused = jnp.array(staged)
+                regs, res, ok, compact = fn(self.registers, fused)
+                self.registers = regs
+                return regs, res, ok, compact
+
         self.dispatch_count += 1
-        self.registers = regs
         self.next_gid += B
-        return res[:B], ok[:B], gids
+        out, fut = self._submit(job, defer)
+        if fut is not None:
+            return PendingBatch(None, None, None, gids, B, K, base, idx,
+                                mode, fut=fut)
+        _, res, ok, compact = out
+        return PendingBatch(res, ok, compact, gids, B, K, base, idx, mode)
 
     def read_all(self) -> np.ndarray:
+        self._join()
         return np.asarray(self.registers)
 
     def snapshot(self):
+        self._join()
         return np.asarray(self.registers).copy(), self.next_gid
 
     def restore(self, snap):
+        self._join()
         regs, gid = snap
         self.registers = jnp.asarray(regs)
         self.next_gid = gid

@@ -5,7 +5,9 @@ benchmarks; contention timing lives in repro.sim.  Pieces:
 
   * per-node in-memory store + 2PL lock table (NO_WAIT / WAIT_DIE),
   * 2PC for distributed cold parts,
-  * hot / cold / warm classification through the replicated hot index,
+  * hot / cold / warm classification through the replicated hot index
+    (vectorized over whole admission batches when no controller can
+    swap the placement mid-batch),
   * per-txn hot path (``run``): one switch dispatch per hot txn, and the
     BATCHED hot path (``run_batch``): consecutive hot txns are grouped
     into ONE vectorized ``SwitchEngine.execute_batch`` dispatch —
@@ -15,6 +17,13 @@ benchmarks; contention timing lives in repro.sim.  Pieces:
     vectorized engines (``_flush_hot_group``); the timing-sim analogue
     of this admission discipline (batched + pipelined switch rounds)
     lives in repro.sim.model,
+  * ASYNC hot path (``async_hot=True``): dispatched groups stay on
+    device as ``PendingBatch`` handles (bounded by ``max_inflight``),
+    overlapping group k's execution with group k+1's packet build;
+    client results and WAL ``switch_result`` entries fill lazily at
+    ``drain()`` — invoked at every consistency point (warm txn,
+    recovery, offload snapshot, migration) and byte-identical to the
+    synchronous path (tests/test_hotpath.py),
   * warm protocol: cold sub-txn made abort-proof (locks acquired, constraints
     checked) BEFORE the switch sub-txn is sent; switch sub-txns count as
     committed on send (they cannot abort),
@@ -34,8 +43,8 @@ import numpy as np
 from repro.core.engine import SwitchEngine, init_registers
 from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
-                                SwitchConfig, addp_unsafe_rows, build_packets,
-                                empty_packets, mark_multipass, scan_flags)
+                                SwitchConfig, addp_unsafe_rows,
+                                build_packets)
 from repro.db.txn import Txn, node_of
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
@@ -108,21 +117,75 @@ class DBNode:
                 self.store[e.payload["key"]] = e.payload["new"]
 
 
+class LazyResults:
+    """List-like view over one ``run_batch`` call's results — the client
+    half of the lazy result plane.  The underlying list is filled in by
+    ``Cluster.drain()``; reading any entry (indexing, iteration,
+    comparison) drains the cluster's outstanding hot groups first, so a
+    caller can fire many async batches back-to-back and only pay the
+    device sync when a result is actually consumed."""
+
+    __slots__ = ("_cluster", "_values")
+
+    def __init__(self, cluster: "Cluster", values: list):
+        self._cluster = cluster
+        self._values = values
+
+    def _force(self) -> list:
+        self._cluster.drain()
+        return self._values
+
+    def __len__(self):
+        return len(self._values)
+
+    def __getitem__(self, i):
+        return self._force()[i]
+
+    def __iter__(self):
+        return iter(self._force())
+
+    def __eq__(self, other):
+        if isinstance(other, LazyResults):
+            other = other._force()
+        return self._force() == other
+
+    def __repr__(self):
+        return repr(self._force())
+
+
 class Cluster:
-    """Functional P4DB cluster: nodes + switch + hot index."""
+    """Functional P4DB cluster: nodes + switch + hot index.
+
+    ``async_hot=True`` turns on the asynchronous device-resident hot
+    path: ``run_batch`` dispatches each hot group to the switch engine
+    and keeps building/dispatching subsequent groups while earlier ones
+    are still in flight on device (bounded by ``max_inflight`` — 2 =
+    double-buffered).  Hot txns are abort-free commit-on-send, so WAL
+    ``switch_send`` entries (and commit stats) are logged at dispatch;
+    ``switch_result`` entries and client results are filled lazily by
+    ``drain()``, which runs at every consistency point: a warm txn
+    touching a hot key, ``crash_switch_and_recover``,
+    ``snapshot_offload``, and epoch migration.  With ``async_hot=False``
+    (the default) every group materializes before the next one builds —
+    the synchronous reference path the async mode is pinned
+    byte-identical against (tests/test_hotpath.py)."""
 
     def __init__(self, n_nodes: int, switch_cfg: SwitchConfig,
                  hot_index: Optional[HotIndex] = None,
                  protocol: str = NO_WAIT, use_switch: bool = True,
-                 switch_mode: str = "auto"):
+                 switch_mode: str = "auto", async_hot: bool = False,
+                 max_inflight: int = 2):
         self.nodes = [DBNode(i, protocol) for i in range(n_nodes)]
         self.switch_cfg = switch_cfg
-        self.switch = SwitchEngine(switch_cfg)
+        self.async_hot = async_hot
+        self.max_inflight = max(int(max_inflight), 1)
+        self.switch = self._fresh_engine()
         self.hot_index = hot_index          # setter replicates to nodes
         self.use_switch = use_switch and hot_index is not None
         self.switch_mode = switch_mode
         self._ts = 0
         self.stats = collections.Counter()
+        self._inflight: List[tuple] = []    # FIFO of undrained hot groups
         # adaptive hot-set management (repro.core.heat / repro.db.migrate):
         # both stay None unless an EpochController attaches — every hot/cold
         # path below is byte-identical to a plain cluster in that case
@@ -130,6 +193,15 @@ class Cluster:
         self.controller = None
 
     # ------------------------------------------------------------ setup --
+    def _fresh_engine(self) -> SwitchEngine:
+        """One source of truth for engine construction (initial setup AND
+        post-crash recovery): the staging-buffer pool must outlast the
+        in-flight window (+1 for the group being staged, +1 slack for the
+        warm synchronous path)."""
+        return SwitchEngine(self.switch_cfg,
+                            stager_pool=self.max_inflight + 2,
+                            async_dispatch=self.async_hot)
+
     @property
     def hot_index(self):
         return self._hot_index
@@ -145,6 +217,7 @@ class Cluster:
             n.hot_index = hi
 
     def load(self, key: int, value: int):
+        self.drain()      # direct register poke: settle in-flight work
         self.nodes[node_of(key)].store[key] = value
         if self.use_switch and self.hot_index.is_hot(key):
             s, r = self.hot_index.slot(key)
@@ -159,6 +232,26 @@ class Cluster:
         # is what makes the migration's per-node swap load-bearing
         return self.nodes[txn.home].hot_index.classify(trace)
 
+    def _classify_batch(self, txns: List[Txn]) -> List[str]:
+        """Vectorized hot/warm/cold classification for a whole admission
+        batch: one ``searchsorted`` over every accessed key instead of
+        per-key dict probes.  Only valid when no controller is attached —
+        the placement then cannot change mid-batch, and every node's
+        replica is the same index object the setter fanned out."""
+        B = len(txns)
+        if not self.use_switch:
+            return ["cold"] * B
+        n_ops = np.fromiter((len(t.ops) for t in txns), np.int64, B)
+        keys = np.concatenate([t.ops_np for t in txns])[:, 1] if B \
+            else np.zeros(0, np.int64)
+        hot = self.hot_index.hot_mask_np(keys)
+        rows = np.repeat(np.arange(B), n_ops)
+        hits = np.bincount(rows, hot, minlength=B)
+        all_hot = hits == n_ops          # vacuously hot for 0-op txns,
+        any_hot = hits > 0               # matching HotIndex.classify
+        return ["hot" if a else "warm" if w else "cold"
+                for a, w in zip(all_hot, any_hot)]
+
     # ---------------------------------------------- adaptive hot-set mgmt --
     def _observe(self, txn: Txn):
         """Feed the heat tracker (when attached); returns True when the
@@ -170,8 +263,10 @@ class Cluster:
 
     # -------------------------------------------------------- execution --
     def run(self, txn: Txn, max_retries: int = 10):
+        if self._inflight:
+            self.drain()                    # per-txn path: always drained
         if self._observe(txn):
-            self.controller.reconfigure()   # per-txn path: always drained
+            self.controller.reconfigure()
         kind = self.classify(txn)
         if kind == "hot":                 # switch txns are abort-free (§5)
             self.stats["hot"] += 1
@@ -190,22 +285,20 @@ class Cluster:
     # hot: switch-only, abort-free, no coordination (paper §5)
     def _run_hot(self, txn: Txn):
         home = self.nodes[txn.home]
-        pkt, order = self._to_packet(txn)
-        flags = scan_flags(pkt)
-        self._validate_mode(flags)
-        home.log("switch_send", txn.tid,
-                 ops=[(o, k, v) for o, k, v in txn.ops])
-        res_d, ok, gids = self.switch.execute_batch(pkt, flags,
-                                                    mode=self.switch_mode)
-        res = np.asarray(res_d)
-        home.log("switch_result", txn.tid, gid=int(gids[0]),
+        pkt, meta = build_packets([txn], self.hot_index, self.switch_cfg)
+        self._validate_mode(meta)
+        home.log("switch_send", txn.tid, ops=list(txn.ops))
+        pb = self.switch.execute_batch(pkt, meta, mode=self.switch_mode)
+        res = pb.results_np()
+        home.log("switch_result", txn.tid, gid=int(pb.gids[0]),
                  results=res[0, :len(txn.ops)].tolist())
         self.stats["commits"] += 1
         if pkt["is_multipass"][0]:
             self.stats["multipass"] += 1
+        order = meta["order"]
         out = [0] * len(txn.ops)
-        for slot, i in enumerate(order):
-            out[i] = int(res[0, slot])
+        for slot in range(len(txn.ops)):
+            out[order[0, slot]] = int(res[0, slot])
         return out
 
     # ------------------------------------------------- batched execution --
@@ -241,21 +334,31 @@ class Cluster:
         txn exhausted its retries)."""
         results: List[Optional[list]] = [None] * len(txns)
         pending: List[Tuple[int, Txn]] = []
+        # without a controller the placement is frozen for the whole batch
+        # -> classify every txn with one vectorized index lookup up front
+        kinds = self._classify_batch(txns) if self.controller is None \
+            else None
         for i, txn in enumerate(txns):
             if self._observe(txn):
                 # drain in-flight hot groups BEFORE the migration touches
-                # the registers or swaps the index (protocol step 1)
+                # the registers or swaps the index (protocol step 1);
+                # migrate() itself drains the async result plane
                 self._flush_hot_group(pending, results)
                 self.controller.reconfigure()
-            kind = self.classify(txn)
+            kind = kinds[i] if kinds is not None else self.classify(txn)
             if kind == "hot":
                 self.stats["hot"] += 1
                 pending.append((i, txn))
                 continue
             if kind == "warm":
+                # a warm txn touches hot keys: dispatch the buffered group
+                # AND sync every outstanding handle (consistency point)
                 self._flush_hot_group(pending, results)
+                self.drain()
             results[i] = self._run_with_retries(txn, kind, max_retries)
         self._flush_hot_group(pending, results)
+        if self.async_hot:
+            return LazyResults(self, results)
         return results
 
     def _run_with_retries(self, txn: Txn, kind: str, max_retries: int):
@@ -305,49 +408,79 @@ class Cluster:
 
     def _dispatch_hot_group(self, pending: List[Tuple[int, Txn]],
                             results: List[Optional[list]], prebuilt=None):
-        """Commit one contiguous run of hot txns in ONE switch dispatch."""
+        """Commit one contiguous run of hot txns in ONE switch dispatch.
+
+        Hot txns are abort-free commit-on-send (PR 2), so ``switch_send``
+        WAL entries and commit/multipass stats are final at dispatch.
+        The synchronous path then materializes results inline (the PR 1
+        reference behavior); the async path parks the ``PendingBatch``
+        handle on the in-flight queue — ``switch_result`` entries and
+        client results are filled by ``drain()`` — and immediately
+        returns to admission, overlapping the NEXT group's packet build
+        with this group's device execution."""
         group = [t for _, t in pending]
         pkts, meta = prebuilt or build_packets(group, self.hot_index,
                                                self.switch_cfg)
         self._validate_mode(meta)
         for t in group:
-            self.nodes[t.home].log("switch_send", t.tid,
-                                   ops=[(o, k, v) for o, k, v in t.ops])
-        res_d, ok_d, gids = self.switch.execute_batch(
-            pkts, meta, mode=self.switch_mode)
-        res = np.asarray(res_d)                  # one host sync per group
+            # list(t.ops): ops tuples are immutable, no need to repack
+            self.nodes[t.home].log("switch_send", t.tid, ops=list(t.ops))
+        if self.async_hot:
+            pb = self.switch.execute_batch(pkts, meta,
+                                           mode=self.switch_mode,
+                                           defer=True)
+        else:
+            # 3-arg call kept for monkeypatch/spy compatibility
+            pb = self.switch.execute_batch(pkts, meta,
+                                           mode=self.switch_mode)
+        multipass = int(np.count_nonzero(pkts["is_multipass"][:len(group)]))
+        self.stats["commits"] += len(group)
+        if multipass:
+            self.stats["multipass"] += multipass
+        if not self.async_hot:
+            self._drain_group(pb, list(pending), meta, results)
+            return
+        self._inflight.append((pb, list(pending), meta, results))
+        while len(self._inflight) > self.max_inflight:
+            self._drain_group(*self._inflight.pop(0))
+
+    # ---------------------------------------------- lazy result plane --
+    def drain(self):
+        """Barrier: materialize every outstanding hot group, in dispatch
+        order — fills client results and WAL ``switch_result`` entries.
+        A no-op on the synchronous path (nothing is ever outstanding)."""
+        while self._inflight:
+            self._drain_group(*self._inflight.pop(0))
+
+    def _drain_group(self, pb, pending: List[Tuple[int, Txn]], meta,
+                     results: List[Optional[list]]):
+        """Materialize one group's result plane (compact D2H transfer)
+        and scatter it back to clients + WALs, vectorized: one
+        ``put_along_axis`` un-permutes all packet slots to txn op order
+        instead of a per-op Python loop."""
+        res = pb.results_np()                       # [B, K] host plane
+        B, K = res.shape
         order = meta["order"]
+        n_ops = meta["n_ops"]
+        valid = np.arange(K)[None, :] < np.asarray(n_ops)[:, None]
+        # pad slots scatter into a sacrificial extra column
+        outs = np.zeros((B, K + 1), res.dtype)
+        np.put_along_axis(outs, np.where(valid, order, K), res, axis=1)
         for b, (i, t) in enumerate(pending):
-            n_ops = len(t.ops)
-            self.nodes[t.home].log("switch_result", t.tid, gid=int(gids[b]),
-                                   results=res[b, :n_ops].tolist())
-            self.stats["commits"] += 1
-            if pkts["is_multipass"][b]:
-                self.stats["multipass"] += 1
-            out = [0] * n_ops
-            for slot in range(n_ops):
-                out[order[b, slot]] = int(res[b, slot])
-            results[i] = out
+            n = len(t.ops)
+            self.nodes[t.home].log("switch_result", t.tid,
+                                   gid=int(pb.gids[b]),
+                                   results=res[b, :n].tolist())
+            results[i] = outs[b, :n].tolist()
 
     def _to_packet(self, txn: Txn):
-        """Build the switch packet; dependency-free op lists are sorted by
-        stage (the partition manager knows every tuple's stage), which is
-        what makes e.g. YCSB single-pass.  Returns (pkt, perm) where perm
-        maps packet slots back to txn op indices."""
-        from repro.core.layout import trace_reorderable
-        trace = [(k, o) for o, k, _ in txn.ops]
-        order = list(range(len(txn.ops)))
-        if trace_reorderable(trace):
-            order.sort(key=lambda i: self.hot_index.slot(txn.ops[i][1])[0])
-        pkt = empty_packets(1, self.switch_cfg)
-        for slot, i in enumerate(order):
-            o, k, v = txn.ops[i]
-            s, r = self.hot_index.slot(k)
-            pkt["op"][0, slot] = o
-            pkt["stage"][0, slot] = s
-            pkt["reg"][0, slot] = r
-            pkt["operand"][0, slot] = v
-        return mark_multipass(pkt), order
+        """Build the switch packet for ONE txn: ``build_packets`` at B=1,
+        so the per-txn and batched paths share a single source of
+        ordering/multipass truth and can never drift.  Returns
+        (pkt, perm) where perm maps packet slots back to txn op
+        indices."""
+        pkt, meta = build_packets([txn], self.hot_index, self.switch_cfg)
+        return pkt, [int(s) for s in meta["order"][0, :len(txn.ops)]]
 
     # cold: 2PL on nodes (+2PC when distributed)
     def _run_cold(self, txn: Txn):
@@ -417,8 +550,9 @@ class Cluster:
         # an explicit switch_mode that rejects the hot sub-txn must fail
         # BEFORE the cold part takes locks and applies/logs its writes
         if self.switch_mode != "auto":
-            pkt, _ = self._to_packet(hot_txn)
-            self._validate_mode(scan_flags(pkt))
+            _, meta = build_packets([hot_txn], self.hot_index,
+                                    self.switch_cfg)
+            self._validate_mode(meta)
         cold_res = self._exec_on_nodes(cold_txn, ts=self._ts)
         # cold part can no longer abort -> send switch sub-txn
         hot_res = self._run_hot(hot_txn)
@@ -443,7 +577,14 @@ class Cluster:
         replayed — their packets were built under the placement that is
         still current, and everything earlier is already captured in the
         snapshot.  With no migrations this is the original full-WAL
-        replay."""
+        replay.
+
+        Async hot path: outstanding handles are drained first — the
+        in-flight window is a host-visibility artifact, not lost state
+        (the device already executed the dispatches in order), so
+        recovery sees the same fully-resulted WAL the synchronous path
+        would have written."""
+        self.drain()
         entries = []          # (gid_or_None, send_entry, result_entry)
         for n in self.nodes:
             wal = n.wal
@@ -463,7 +604,7 @@ class Cluster:
         # replay: fresh registers, known GID order first, then in-flight
         # txns ordered by read/write-set dependencies against the replayed
         # state (Fig 9: a read that observed x must follow the write of x)
-        self.switch = SwitchEngine(self.switch_cfg)
+        self.switch = self._fresh_engine()
         # re-load hot tuples' initial values from node stores? initial switch
         # values were offloaded at setup; replay assumes log captures all
         # mutations since offload, so start from the offload snapshot:
@@ -479,6 +620,7 @@ class Cluster:
         return len(known), len(unknown)
 
     def snapshot_offload(self):
+        self.drain()          # snapshot is a consistency point (async path)
         # host copy: the live register buffer is donated to later batched
         # calls, so a device-array reference would be invalidated on TPU
         self._offload_snapshot = np.asarray(self.switch.registers).copy()

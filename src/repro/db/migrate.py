@@ -94,10 +94,15 @@ def migrate(cluster, new_index: HotIndex,
             plan: Optional[MigrationPlan] = None) -> MigrationPlan:
     """Execute the migration protocol on a functional ``Cluster``.
 
-    The caller must have drained in-flight hot groups (``run_batch``
+    The caller must have flushed buffered hot groups (``run_batch``
     flushes before invoking the controller; the per-txn path is trivially
-    drained between txns)."""
+    drained between txns); the async result plane is drained HERE — a
+    migration is a consistency point, so every outstanding
+    ``PendingBatch`` is materialized (WAL ``switch_result`` entries
+    filled) before the registers are touched or the index swapped."""
     from repro.core.engine import init_registers
+
+    cluster.drain()
 
     old_index = cluster.hot_index
     old = old_index.placement if old_index is not None else Placement({})
@@ -152,11 +157,23 @@ class EpochController:
 
     ``top_k`` defaults to the size of the cluster's current hot set and
     is clamped to the switch's register capacity (over-capacity layouts
-    raise in ``make_layout``)."""
+    raise in ``make_layout``).
+
+    Hysteresis / cost-benefit gating: with ``gate_t_reconfig > 0`` a due
+    migration executes only when its projected benefit beats the pause it
+    costs — the switch is unavailable for ``gate_t_reconfig`` seconds per
+    migration (~``gate_t_reconfig * gate_txn_rate`` forgone txns), while
+    the benefit is the extra fully-hot txns the new placement would have
+    admitted over the next epoch, projected from the tracker's observed
+    window.  The default (``gate_t_reconfig=0``) disables the gate
+    entirely — byte-identical to the ungated controller (pinned in
+    tests/test_hotpath.py)."""
 
     def __init__(self, cluster, tracker: HeatTracker, interval: int,
                  top_k: Optional[int] = None, layout_fn=make_layout,
-                 seed: int = 0, min_change: int = 1):
+                 seed: int = 0, min_change: int = 1,
+                 gate_t_reconfig: float = 0.0,
+                 gate_txn_rate: float = 100_000.0):
         self.cluster = cluster
         self.tracker = tracker
         self.interval = int(interval)
@@ -164,8 +181,11 @@ class EpochController:
         self.layout_fn = layout_fn
         self.seed = seed
         self.min_change = min_change   # skip no-op migrations below this
+        self.gate_t_reconfig = float(gate_t_reconfig)
+        self.gate_txn_rate = float(gate_txn_rate)
         self._since = 0
         self.epochs = 0                # reconfigure() invocations
+        self.gated = 0                 # migrations skipped by the cost gate
         self.plans: List[Dict[str, int]] = []
         cluster.tracker = tracker
         cluster.controller = self
@@ -202,6 +222,31 @@ class EpochController:
         plan = diff_placements(old, placement)
         if plan.n_changed < self.min_change:
             return None
+        if self.gate_t_reconfig > 0.0:
+            gain = self.projected_gain(placement, traces)
+            cost = self.gate_t_reconfig * self.gate_txn_rate
+            if gain <= cost:
+                self.gated += 1
+                return None
         plan = migrate(self.cluster, HotIndex(placement), plan)
         self.plans.append(plan.summary())
         return plan
+
+    def projected_gain(self, new_placement: Placement, traces) -> float:
+        """Projected extra fully-hot txns over the next epoch if the
+        cluster migrated to ``new_placement``: the observed window's hot
+        share under the new placement minus its share under the current
+        one, scaled to the epoch length.  The gate compares this against
+        the pause cost ``gate_t_reconfig * gate_txn_rate`` (txns the
+        whole cluster forgoes while the switch reloads)."""
+        if not traces:
+            return 0.0
+        old_slot = self.cluster.hot_index.placement.slot \
+            if self.cluster.hot_index is not None else {}
+        new_slot = new_placement.slot
+        old_hot = sum(1 for tr in traces
+                      if all(k in old_slot for k, _ in tr))
+        new_hot = sum(1 for tr in traces
+                      if all(k in new_slot for k, _ in tr))
+        horizon = self.interval if self.interval > 0 else len(traces)
+        return (new_hot - old_hot) / len(traces) * horizon

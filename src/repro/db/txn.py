@@ -10,6 +10,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.packets import ADD, ADDP, CADD, NOP, READ, WRITE
 
 _ids = itertools.count()
@@ -21,6 +23,20 @@ class Txn:
     ops: List[Tuple[int, int, int]]            # (opcode, key, operand)
     home: int = 0                              # issuing node
     tid: int = field(default_factory=lambda: next(_ids))
+    _ops_np: Optional[np.ndarray] = field(default=None, repr=False,
+                                          compare=False)
+
+    @property
+    def ops_np(self) -> np.ndarray:
+        """The op list as an [n_ops, 3] int64 array, parsed once and
+        cached — the batched packet builder flattens whole admission
+        groups by concatenating these instead of iterating Python tuples.
+        ``ops`` is FROZEN after construction: the DBMS never mutates it
+        and derived sub-txns build new Txn objects; in-place mutation
+        would serve a stale cache."""
+        if self._ops_np is None:
+            self._ops_np = np.array(self.ops, np.int64).reshape(-1, 3)
+        return self._ops_np
 
     def keys(self):
         return [k for _, k, _ in self.ops]

@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.switch_txn.switch_txn import switch_txn_call
+from repro.kernels.switch_txn.switch_txn import (result_gather_call,
+                                                 switch_txn_call)
 
 NOP = 0
 
@@ -35,3 +36,19 @@ def switch_exec(registers, op, stage, reg, val, chunk=1024, interpret=None):
                                     interpret=interpret)
     return (regs.reshape(S, R), res.reshape(B, K),
             ok.reshape(B, K).astype(bool))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gather_results(res, idx, chunk=1024, interpret=None):
+    """Result compaction for the async hot path: gather the device-only
+    result positions out of the full [B, K] plane so the host transfer
+    covers only what the client actually reads.
+
+    res: [B, K] int32; idx: [M] int32 flat row-major positions (clamped).
+    Returns [M] int32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m = idx.shape[0]
+    return result_gather_call(res.reshape(-1), idx,
+                              chunk=min(chunk, max(m, 1)),
+                              interpret=interpret)

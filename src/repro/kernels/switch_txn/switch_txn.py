@@ -58,6 +58,46 @@ def _kernel(op_ref, g_ref, val_ref, regs_in_ref, regs_out_ref, res_ref,
         regs_out_ref[...] = scratch_ref[...]
 
 
+def _gather_kernel(idx_ref, src_ref, out_ref, *, chunk, n_src):
+    def body(i, _):
+        j = jnp.minimum(idx_ref[i], n_src - 1)
+        out_ref[i] = src_ref[j]
+        return ()
+
+    jax.lax.fori_loop(0, chunk, body, ())
+
+
+def result_gather_call(src, idx, *, chunk=1024, interpret=True):
+    """Result-compaction gather: out[i] = src[min(idx[i], n-1)].
+
+    The async hot path's result plane ships only the compacted READ-class
+    results device -> host; this kernel is the gather step for the pallas
+    engine mode (the jit engines fuse an equivalent ``jnp.take`` into
+    their compiled call).  ``idx`` is padded by the packet stager to a
+    power-of-two bucket; pad entries point at slot 0 and are sliced off
+    by the caller, so clamping (not masking) is sufficient.
+
+    src: [N] int32; idx: [M] int32, any M >= 1.  Returns [M] int32."""
+    n_src = src.shape[0]
+    m = idx.shape[0]
+    pad = (-m) % chunk
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), jnp.int32)])
+    n_chunks = (m + pad) // chunk
+    kernel = functools.partial(_gather_kernel, chunk=chunk, n_src=n_src)
+    idx_spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    src_spec = pl.BlockSpec((n_src,), lambda i: (0,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[idx_spec, src_spec],
+        out_specs=idx_spec,
+        out_shape=jax.ShapeDtypeStruct((m + pad,), jnp.int32),
+        interpret=interpret,
+    )(idx, src)
+    return out[:m]
+
+
 def switch_txn_call(registers_flat, op, g, val, *, chunk=1024,
                     interpret=True):
     """registers_flat: [n_slots] int32; op/g/val: [N] int32, any N >= 1.

@@ -6,7 +6,7 @@ import pytest
 
 from repro.kernels.moe_route.ops import route_positions
 from repro.kernels.moe_route.ref import positions_ref
-from repro.kernels.switch_txn.ops import switch_exec
+from repro.kernels.switch_txn.ops import gather_results, switch_exec
 from repro.kernels.switch_txn.ref import switch_exec_ref
 
 
@@ -29,6 +29,24 @@ def test_switch_txn_kernel(S, R, B, K, chunk):
     np.testing.assert_array_equal(r1, r2)
     np.testing.assert_array_equal(res1, res2)
     np.testing.assert_array_equal(ok1, ok2)
+
+
+@pytest.mark.parametrize("B,K,m,chunk", [
+    (16, 3, 7, 8),
+    (64, 5, 64, 64),
+    (100, 8, 301, 128),        # padding path (m not a chunk multiple)
+    (1, 7, 1, 4),              # single gathered row
+])
+def test_result_gather_kernel(B, K, m, chunk):
+    """The result-compaction gather vs a plain numpy fancy index,
+    including out-of-range indices (clamped, like the fused jnp.take)."""
+    rng = np.random.default_rng(B * 100 + m)
+    res = jnp.asarray(rng.integers(-50, 100, (B, K)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, B * K + 3, m), jnp.int32)  # some OOR
+    out = gather_results(res, idx, chunk=chunk)
+    ref = np.asarray(res).reshape(-1)[np.minimum(np.asarray(idx),
+                                                 B * K - 1)]
+    np.testing.assert_array_equal(out, ref)
 
 
 @pytest.mark.parametrize("n,n_experts,block", [

@@ -278,3 +278,97 @@ def pipeline_crossover(per, rows):
         if d not in out and r["throughput"] > per["throughput"]:
             out[d] = mb
     return {d: out.get(d) for d in sorted({d for d, _, _ in rows})}
+
+
+# --------------------------------------------- durability (PR 6) ----
+# shared by benchmarks/bench_durability.py (BENCH_durability.json) and
+# run.py::bench_durability (CSV figure) so the published artifact and
+# the harness row can never desynchronize their experiment
+
+DURABILITY_SWITCH = SwitchConfig(n_stages=16, regs_per_stage=2048,
+                                 max_instrs=16)
+DURABILITY_N_NODES = 4
+DURABILITY_CHUNK = 64                    # txns per run_batch admission
+# checkpoint every N switch sends; 0 = only the initial offload snapshot
+DURABILITY_CKPT_INTERVALS_FAST = [0, 128, 32]
+DURABILITY_CKPT_INTERVALS_FULL = [0, 512, 128, 32]
+# sim failover sweep: seconds between incremental checkpoints
+DURABILITY_SIM_CKPTS = [0.0, 2e-3, 0.5e-3]
+
+
+def durability_workload(n, seed=0, hot_per_node=16):
+    """Mostly-hot YCSB stream + placement sized for DURABILITY_SWITCH —
+    recovery work (replayed switch sends) dominates, which is the signal
+    the checkpoint-interval sweep measures."""
+    p = ycsb.YCSBParams(n_nodes=DURABILITY_N_NODES, keys_per_node=1000,
+                        hot_per_node=hot_per_node)
+    sample = ycsb.generate(np.random.default_rng(seed), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 4 * hot_per_node,
+                         DURABILITY_SWITCH)
+    txns = ycsb.generate(np.random.default_rng(seed + 1), n, p)
+    return txns, hi
+
+
+def _durability_cluster(hi, **kw):
+    from repro.db.dbms import Cluster
+    c = Cluster(DURABILITY_N_NODES, DURABILITY_SWITCH, hi, **kw)
+    for k in list(hi.placement.slot)[:32]:
+        c.load(k, 10)
+    c.snapshot_offload()
+    return c
+
+
+def _durability_run(c, txns):
+    for i in range(0, len(txns), DURABILITY_CHUNK):
+        c.run_batch(txns[i:i + DURABILITY_CHUNK])
+    c.drain()
+
+
+def durability_recovery_row(txns, hi, interval):
+    """Run the stream under one checkpoint interval, crash the switch,
+    time the WAL-replay recovery; asserts byte-identical registers.
+    Returns (cluster, row) — the cluster so callers can persist a WAL."""
+    c = _durability_cluster(hi, checkpoint_interval=interval)
+    _durability_run(c, txns)
+    before = np.asarray(c.switch.registers).copy()
+    (known, unknown), dt = timed(c.crash_switch_and_recover)
+    assert np.array_equal(before, np.asarray(c.switch.registers)), \
+        f"recovery diverged at interval={interval}"
+    return c, dict(interval=interval, recover_s=dt,
+                   replayed=known + unknown,
+                   checkpoints=int(c.stats["checkpoints"]),
+                   wal_records=sum(len(n.wal) for n in c.nodes))
+
+
+def durability_standby_row(txns, hi, interval):
+    """Same stream with a warm standby: time the takeover and assert the
+    bounded-recovery contract (replayed == sends since last checkpoint)."""
+    c = _durability_cluster(hi, checkpoint_interval=interval, standby=True)
+    _durability_run(c, txns)
+    before = np.asarray(c.switch.registers).copy()
+    since = c._sends_since_ckpt
+    (known, unknown), dt = timed(c.fail_over)
+    assert known + unknown == since, \
+        f"unbounded takeover: replayed {known + unknown}, expected {since}"
+    assert np.array_equal(before, np.asarray(c.switch.registers)), \
+        "failover diverged"
+    return dict(interval=interval, takeover_s=dt, replayed=known + unknown)
+
+
+def durability_sim_rows(sim_time=0.01, seed=3,
+                        ckpt_intervals=tuple(DURABILITY_SIM_CKPTS)):
+    """Priced failover in the DES: one switch crash at 70% of the run,
+    outage = t_failover + replayed sends * t_replay_send, swept over the
+    checkpoint cadence that bounds the replay term."""
+    profs, _ = ycsb_profiles(n=1500)
+    rows = []
+    for ck in ckpt_intervals:
+        r = run_sim(profs, SystemConfig(kind="p4db", max_batch=8,
+                                        crash_at=0.7 * sim_time,
+                                        ckpt_interval=ck),
+                    sim_time=sim_time, seed=seed)
+        rows.append(dict(interval=ck,
+                         outage_s=r["failover"]["outage"],
+                         replayed=r["failover"]["replayed"],
+                         throughput=r["throughput"]))
+    return rows

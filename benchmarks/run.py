@@ -14,6 +14,7 @@ to artifacts/bench/.
   fig17  hot-set exceeding switch capacity (graceful degradation)
   fig18  TPC-C latency breakdown + existing-optimization stack
   bench_adaptive  drifting hot set: static vs adaptive vs oracle placement
+  bench_durability  recovery time vs checkpoint interval + priced failover
   engine switch-engine execution modes (serial / affine / staged / pallas)
 """
 from __future__ import annotations
@@ -391,6 +392,8 @@ SUMMARY_HEADLINES = [
      "adaptive vs oracle hot rate under drift (PR 4)"),
     ("BENCH_hotpath.json", ("headline_async_speedup",),
      "async hot path vs the PR 1 batched path (functional, PR 5)"),
+    ("BENCH_durability.json", ("headline_recovery_speedup",),
+     "bounded recovery: checkpointed vs full-WAL replay (PR 6)"),
 ]
 
 
@@ -416,6 +419,40 @@ def bench_summary():
     save_csv("summary_trajectory",
              ["artifact", "metric", "value", "meaning"], rows)
     return rows
+
+
+def bench_durability(fast=True):
+    """Bounded recovery + priced failover (PR 6): recovery time vs
+    checkpoint interval on the functional cluster, and the DES failover
+    outage vs checkpoint cadence.  The published artifact
+    (BENCH_durability.json) comes from benchmarks/bench_durability.py —
+    both drive the same helpers in benchmarks/common.py."""
+    n = 400 if fast else 2000
+    intervals = C.DURABILITY_CKPT_INTERVALS_FAST if fast \
+        else C.DURABILITY_CKPT_INTERVALS_FULL
+    txns, hi = C.durability_workload(n)
+    rows = []
+    base = None
+    for interval in intervals:
+        _, row = C.durability_recovery_row(txns, hi, interval)
+        rows.append([interval, row["recover_s"] * 1e3, row["replayed"],
+                     row["checkpoints"]])
+        if base is None:
+            base = row
+        emit(f"durability_recover_ck{interval}", row["recover_s"] * 1e6,
+             f"{base['recover_s'] / max(row['recover_s'], 1e-9):.1f}x "
+             f"faster than unckpt")
+    save_csv("bench_durability_recovery",
+             ["ckpt_interval", "recover_ms", "replayed", "checkpoints"],
+             rows)
+    sim_rows = C.durability_sim_rows(sim_time=0.01 if fast else 0.02)
+    save_csv("bench_durability_sim_failover",
+             ["ckpt_interval_s", "outage_s", "replayed", "throughput"],
+             [[r["interval"], r["outage_s"], r["replayed"],
+               r["throughput"]] for r in sim_rows])
+    for r in sim_rows:
+        emit(f"durability_sim_ck{r['interval']:g}", r["outage_s"] * 1e6,
+             f"{r['replayed']} sends replayed at takeover")
 
 
 def engine_micro():
@@ -476,6 +513,7 @@ def main() -> None:
     bench_sim_batch(fast)
     bench_sim_pipeline(fast)
     bench_adaptive(fast)
+    bench_durability(fast)
     engine_micro()
     bench_summary()
     save_csv("summary", ["name", "us_per_call", "derived"], ROWS)

@@ -523,5 +523,8 @@ class SwitchEngine:
     def restore(self, snap):
         self._join()
         regs, gid = snap
-        self.registers = jnp.asarray(regs)
+        # init_registers copies: the register buffer is donated to later
+        # compiled calls, so the restored snapshot (a checkpoint the warm
+        # standby may restore from repeatedly) must never be aliased
+        self.registers = init_registers(self.cfg, regs)
         self.next_gid = gid

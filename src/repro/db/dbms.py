@@ -45,7 +45,10 @@ from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
                                 SwitchConfig, addp_unsafe_rows,
                                 build_packets)
+from repro.db.faults import FaultPlan, SimulatedCrash, SwitchUnavailable
 from repro.db.txn import Txn, node_of
+from repro.db.wal import (DEFAULT_SEGMENT_SIZE, CheckpointStore,
+                          SegmentedWAL)
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
 
@@ -62,12 +65,22 @@ class LogEntry:
 
 
 class DBNode:
-    def __init__(self, node_id: int, protocol: str = NO_WAIT):
+    def __init__(self, node_id: int, protocol: str = NO_WAIT,
+                 wal_mode: str = "segmented",
+                 wal_segment_size: int = DEFAULT_SEGMENT_SIZE):
         self.id = node_id
         self.store: Dict[int, int] = collections.defaultdict(int)
         self.locks: Dict[int, Tuple[str, set]] = {}     # key -> (mode, owners)
         self.protocol = protocol
-        self.wal: List[LogEntry] = []
+        # "segmented" (default): hash-chained SegmentedWAL with the same
+        # list-like surface; "list": the legacy in-memory list, kept as the
+        # identity-pin reference (tests assert byte-identical behavior)
+        if wal_mode == "segmented":
+            self.wal = SegmentedWAL(segment_size=wal_segment_size)
+        elif wal_mode == "list":
+            self.wal: List[LogEntry] = []
+        else:
+            raise ValueError(f"unknown wal_mode {wal_mode!r}")
         self.ts = 0
         self.hot_index = None     # replicated copy, swapped by migrations
 
@@ -101,7 +114,12 @@ class DBNode:
 
     # -------------------------------------------------------------- wal --
     def log(self, kind, tid, **payload):
-        self.wal.append(LogEntry(kind, tid, payload))
+        # tests legitimately replace node.wal with a filtered plain list
+        # (simulating lost records) — keep accepting both representations
+        if isinstance(self.wal, SegmentedWAL):
+            self.wal.append(kind, tid, payload)
+        else:
+            self.wal.append(LogEntry(kind, tid, payload))
 
     def crash(self):
         """Lose volatile state; keep the WAL (stable storage)."""
@@ -174,8 +192,13 @@ class Cluster:
                  hot_index: Optional[HotIndex] = None,
                  protocol: str = NO_WAIT, use_switch: bool = True,
                  switch_mode: str = "auto", async_hot: bool = False,
-                 max_inflight: int = 2):
-        self.nodes = [DBNode(i, protocol) for i in range(n_nodes)]
+                 max_inflight: int = 2, wal_mode: str = "segmented",
+                 wal_segment_size: int = DEFAULT_SEGMENT_SIZE,
+                 checkpoint_interval: int = 0, standby: bool = False,
+                 fault_plan: Optional[FaultPlan] = None):
+        self.nodes = [DBNode(i, protocol, wal_mode=wal_mode,
+                             wal_segment_size=wal_segment_size)
+                      for i in range(n_nodes)]
         self.switch_cfg = switch_cfg
         self.async_hot = async_hot
         self.max_inflight = max(int(max_inflight), 1)
@@ -191,6 +214,17 @@ class Cluster:
         # path below is byte-identical to a plain cluster in that case
         self.tracker = None
         self.controller = None
+        # durability: diff-only checkpoints + (optional) interval trigger,
+        # warm standby, armed fault plan.  checkpoint_interval = N > 0
+        # takes a checkpoint every N switch sends; 0 = only explicit
+        # checkpoints (snapshot_offload, migration boundaries)
+        self.ckpts = CheckpointStore()
+        self.checkpoint_interval = int(checkpoint_interval)
+        self.fault_plan = fault_plan
+        self._sends_since_ckpt = 0
+        self._switch_down = False
+        self._mid_migration_evicted: set = set()
+        self._standby = self._fresh_engine() if standby else None
 
     # ------------------------------------------------------------ setup --
     def _fresh_engine(self) -> SwitchEngine:
@@ -230,7 +264,22 @@ class Cluster:
         # the home node's REPLICA of the index does the classification
         # (paper §6.1: each node's partition manager holds a copy) — this
         # is what makes the migration's per-node swap load-bearing
-        return self.nodes[txn.home].hot_index.classify(trace)
+        hi = self.nodes[txn.home].hot_index
+        kind = hi.classify(trace)
+        if kind != "cold" and self._switch_down:
+            # partial availability: a crash mid-migration leaves evicted
+            # keys authoritative in their home-node stores — txns touching
+            # ONLY those hot keys demote to the cold path and keep
+            # committing; anything needing a live register must wait for
+            # recovery/failover
+            hot_keys = [k for k, _ in trace if hi.is_hot(k)]
+            if hot_keys and all(k in self._mid_migration_evicted
+                                for k in hot_keys):
+                return "cold"
+            raise SwitchUnavailable(
+                f"switch down: txn {txn.tid} needs live registers "
+                f"(recover_switch() or fail_over() first)")
+        return kind
 
     def _classify_batch(self, txns: List[Txn]) -> List[str]:
         """Vectorized hot/warm/cold classification for a whole admission
@@ -241,6 +290,10 @@ class Cluster:
         B = len(txns)
         if not self.use_switch:
             return ["cold"] * B
+        if self._switch_down:
+            # availability-aware slow path (raises SwitchUnavailable for
+            # txns that need live registers, demotes evicted-only txns)
+            return [self.classify(t) for t in txns]
         n_ops = np.fromiter((len(t.ops) for t in txns), np.int64, B)
         keys = np.concatenate([t.ops_np for t in txns])[:, 1] if B \
             else np.zeros(0, np.int64)
@@ -299,6 +352,7 @@ class Cluster:
         out = [0] * len(txn.ops)
         for slot in range(len(txn.ops)):
             out[order[0, slot]] = int(res[0, slot])
+        self._note_sends(1)
         return out
 
     # ------------------------------------------------- batched execution --
@@ -425,6 +479,10 @@ class Cluster:
         for t in group:
             # list(t.ops): ops tuples are immutable, no need to repack
             self.nodes[t.home].log("switch_send", t.tid, ops=list(t.ops))
+        # Fig-9 window: sends are logged (committed-on-send) but the device
+        # has not executed — a crash here leaves the whole group as
+        # unknown-GID entries that recovery must replay
+        self._fault("mid_group_dispatch", tids=[t.tid for t in group])
         if self.async_hot:
             pb = self.switch.execute_batch(pkts, meta,
                                            mode=self.switch_mode,
@@ -439,10 +497,19 @@ class Cluster:
             self.stats["multipass"] += multipass
         if not self.async_hot:
             self._drain_group(pb, list(pending), meta, results)
+            # crash AFTER the group fully drained: the armed plan may tear
+            # the unsynced tail off a node's open WAL segment
+            self._fault("torn_tail", tids=[t.tid for t in group])
+            self._note_sends(len(group))
             return
         self._inflight.append((pb, list(pending), meta, results))
+        # crash with undrained handles parked: device work may have run but
+        # no response reached any host — result records are lost
+        self._fault("undrained_async", inflight=len(self._inflight))
         while len(self._inflight) > self.max_inflight:
             self._drain_group(*self._inflight.pop(0))
+        self._fault("torn_tail", tids=[t.tid for t in group])
+        self._note_sends(len(group))
 
     # ---------------------------------------------- lazy result plane --
     def drain(self):
@@ -567,63 +634,198 @@ class Cluster:
             results[i] = r
         return results
 
-    # -------------------------------------------------------- recovery --
-    def crash_switch_and_recover(self):
-        """Rebuild switch registers from the nodes' WALs (paper §6.1/A.3).
+    # ----------------------------------------------- faults & durability --
+    def _fault(self, point: str, **ctx):
+        """Instrumented crash point: fires the armed ``FaultPlan`` (if any),
+        applying crash side effects and raising ``SimulatedCrash``.  A
+        crash loses everything volatile on the switch side: the register
+        file and every undrained response (clients keep ``None``); node
+        WALs and stores survive."""
+        fp = self.fault_plan
+        if fp is None or not fp.should_fire(point):
+            return
+        fp.on_crash(self, point, ctx)
+        self._inflight.clear()          # responses never reached the hosts
+        self._switch_down = True
+        raise SimulatedCrash(point, ctx)
 
-        Migrations are recovery checkpoints: each one re-snapshots the
-        offload (``migrate``) after draining in-flight groups, so only
-        switch sends logged AFTER a node's last ``migrate_end`` entry are
-        replayed — their packets were built under the placement that is
-        still current, and everything earlier is already captured in the
-        snapshot.  With no migrations this is the original full-WAL
-        replay.
+    def _note_sends(self, n: int):
+        """Count switch sends toward the checkpoint interval; take a
+        diff-only checkpoint when due (a consistency point — drains)."""
+        self._sends_since_ckpt += n
+        if self.checkpoint_interval \
+                and self._sends_since_ckpt >= self.checkpoint_interval:
+            self.checkpoint(reason="interval")
 
-        Async hot path: outstanding handles are drained first — the
-        in-flight window is a host-visibility artifact, not lost state
-        (the device already executed the dispatches in order), so
-        recovery sees the same fully-resulted WAL the synchronous path
-        would have written."""
+    def checkpoint(self, reason: str = "explicit") -> dict:
+        """Consistency point: drain the async result plane, record a
+        diff-only register checkpoint, log a ``ckpt`` marker on every node
+        (the recovery boundary — replay starts after the newest marker),
+        and refresh the warm standby from the checkpointed state."""
         self.drain()
-        entries = []          # (gid_or_None, send_entry, result_entry)
+        entry = self.ckpts.checkpoint(self.switch.read_all())
+        for n in self.nodes:
+            n.log("ckpt", entry["id"], reason=reason,
+                  n_changed=entry["n_changed"])
+        self._sends_since_ckpt = 0
+        self.stats["checkpoints"] += 1
+        if self._standby is not None:
+            # the standby tails the checkpoint stream: after this it holds
+            # the checkpointed registers, so takeover replays only sends
+            # logged after this marker (bounded recovery)
+            self._standby.restore((self.ckpts.state(), 0))
+        return entry
+
+    def snapshot_offload(self):
+        """Legacy API (initial offload snapshot) — now the first/next
+        checkpoint in the incremental chain."""
+        self.checkpoint(reason="offload")
+
+    def verify_wals(self) -> list:
+        """Run the hash-chain integrity walk over every node's WAL
+        (no-op entries for nodes in legacy list mode)."""
+        out = []
+        for n in self.nodes:
+            if isinstance(n.wal, SegmentedWAL):
+                out.append(dict(node=n.id, **n.wal.verify()))
+            else:
+                out.append(dict(node=n.id, ok=True, records=len(n.wal),
+                                segments=0, sealed=0))
+        return out
+
+    def read(self, key: int) -> int:
+        """Availability-aware point read of one tuple's committed value.
+        Hot keys read the live register (draining first — a consistency
+        point); while the switch is down, keys evicted by an interrupted
+        migration stay readable from their authoritative home-node store
+        (partial availability), every other hot key raises
+        ``SwitchUnavailable``.  Cold keys always read the home store."""
+        if self.use_switch and self.hot_index.is_hot(key):
+            if self._switch_down:
+                if key in self._mid_migration_evicted:
+                    return self.nodes[node_of(key)].store[key]
+                raise SwitchUnavailable(
+                    f"hot key {key} lives on the crashed switch")
+            self.drain()
+            s, r = self.hot_index.slot(key)
+            return int(self.switch.read_all()[s, r])
+        return self.nodes[node_of(key)].store[key]
+
+    # -------------------------------------------------------- recovery --
+    def _post_ckpt_sends(self):
+        """Collect the switch sends to replay: for each node, only entries
+        after its newest ``ckpt`` marker (everything earlier is captured
+        by the checkpoint chain).  Returns (known, unknown) lists of send
+        entries — known ordered by logged GID, in-flight unknowns by tid
+        (deterministic; any order is legal for unresulted txns, paper
+        §A.3, and tid order matches admission order)."""
+        entries = []              # (gid_or_None, tid, send_entry)
         for n in self.nodes:
             wal = n.wal
-            for i in range(len(wal) - 1, -1, -1):
-                if wal[i].kind == "migrate_end":
-                    wal = wal[i + 1:]
+            recs = list(wal)
+            for i in range(len(recs) - 1, -1, -1):
+                if recs[i].kind == "ckpt":
+                    recs = recs[i + 1:]
                     break
-            sends = {e.tid: e for e in wal if e.kind == "switch_send"}
-            res = {e.tid: e for e in wal if e.kind == "switch_result"}
+            sends = {e.tid: e for e in recs if e.kind == "switch_send"}
+            res = {e.tid: e for e in recs if e.kind == "switch_result"}
             for tid, se in sends.items():
                 re = res.get(tid)
                 gid = re.payload["gid"] if re else None
-                entries.append((gid, se, re))
+                entries.append((gid, tid, se))
         known = sorted([e for e in entries if e[0] is not None],
                        key=lambda e: e[0])
-        unknown = [e for e in entries if e[0] is None]
-        # replay: fresh registers, known GID order first, then in-flight
-        # txns ordered by read/write-set dependencies against the replayed
-        # state (Fig 9: a read that observed x must follow the write of x)
-        self.switch = self._fresh_engine()
-        # re-load hot tuples' initial values from node stores? initial switch
-        # values were offloaded at setup; replay assumes log captures all
-        # mutations since offload, so start from the offload snapshot:
-        if getattr(self, "_offload_snapshot", None) is not None:
-            self.switch.registers = init_registers(self.switch_cfg,
-                                                   self._offload_snapshot)
-        order = [se for _, se, _ in known]
-        order += [se for _, se, _ in unknown]   # no dependency -> any order
-        for se in order:
+        unknown = sorted([e for e in entries if e[0] is None],
+                         key=lambda e: e[1])
+        return known, unknown
+
+    def _replay_into(self, engine: SwitchEngine,
+                     reset_registers: bool = True):
+        """Deterministic replay of the post-checkpoint log suffix into
+        ``engine``: seed the registers from the reconstructed checkpoint
+        chain (base + diffs — the honest recovery path), then re-execute
+        known-GID sends in GID order and in-flight unknowns in tid order.
+        Same log ⇒ byte-identical registers (property-tested)."""
+        known, unknown = self._post_ckpt_sends()
+        if reset_registers:
+            base = self.ckpts.reconstruct()
+            if base is not None:
+                engine.registers = init_registers(self.switch_cfg, base)
+        for _, _, se in known + unknown:
             t = Txn("replay", [tuple(o) for o in se.payload["ops"]], 0)
             pkt, _ = self._to_packet(t)
-            self.switch.execute(pkt)
+            engine.execute(pkt)
         return len(known), len(unknown)
 
-    def snapshot_offload(self):
-        self.drain()          # snapshot is a consistency point (async path)
-        # host copy: the live register buffer is donated to later batched
-        # calls, so a device-array reference would be invalidated on TPU
-        self._offload_snapshot = np.asarray(self.switch.registers).copy()
+    def crash_switch(self, lose_inflight: bool = True):
+        """Kill the switch without recovering: the register file and (with
+        ``lose_inflight``) every undrained response are gone; hot traffic
+        raises ``SwitchUnavailable`` until ``recover_switch()`` or
+        ``fail_over()``."""
+        if lose_inflight:
+            self._inflight.clear()
+        else:
+            self.drain()
+        self._switch_down = True
+
+    def recover_switch(self):
+        """Rebuild switch registers from the nodes' WALs (paper §6.1/A.3).
+
+        Checkpoints are the recovery boundary: each ``ckpt`` marker (taken
+        at ``snapshot_offload``, every migration, and every
+        ``checkpoint_interval`` sends) caps how much log must be replayed
+        — only sends after a node's newest marker are re-executed, their
+        packets built under the placement that is still current.  With no
+        checkpoints this is the original full-WAL replay.  In-flight
+        unknowns (no result record) replay after all known-GID sends,
+        ordered by read/write-set dependencies against the replayed state
+        (Fig 9) — commutative ADD streams make tid order sufficient
+        here."""
+        engine = self._fresh_engine()
+        known, unknown = self._replay_into(engine)
+        self.switch = engine
+        self._switch_down = False
+        self._mid_migration_evicted = set()
+        self.stats["recoveries"] += 1
+        return known, unknown
+
+    def crash_switch_and_recover(self):
+        """Legacy one-shot crash + rebuild.  Async hot path: outstanding
+        handles are drained first — the in-flight window is a
+        host-visibility artifact, not lost state (the device already
+        executed the dispatches in order), so recovery sees the same
+        fully-resulted WAL the synchronous path would have written."""
+        if not self._switch_down:
+            self.drain()
+        return self.recover_switch()
+
+    def fail_over(self):
+        """Promote the warm standby.  The standby already holds the last
+        checkpoint's registers (refreshed at every ``checkpoint``), so
+        takeover replays ONLY the post-checkpoint sends — recovery work is
+        bounded by the checkpoint interval, not the log length.  Returns
+        (known, unknown) replay counts; the bounded-recovery pin asserts
+        known + unknown == sends since the last checkpoint."""
+        if self._standby is None:
+            raise RuntimeError("no warm standby configured "
+                               "(Cluster(standby=True))")
+        if not self._switch_down:
+            self.crash_switch()
+        engine = self._standby
+        # host-known GID high-water mark: new txns after takeover must get
+        # fresh GIDs above everything already logged
+        highwater = self.switch.next_gid
+        known, unknown = self._replay_into(engine, reset_registers=False)
+        engine.next_gid = max(engine.next_gid, highwater)
+        self.switch = engine
+        self._switch_down = False
+        self._mid_migration_evicted = set()
+        # re-arm a fresh standby at the current checkpoint state
+        self._standby = self._fresh_engine()
+        if self.ckpts.state() is not None:
+            self._standby.restore((self.ckpts.state(), 0))
+        self.stats["failovers"] += 1
+        return known, unknown
 
     def crash_node_and_recover(self, node_id: int):
         n = self.nodes[node_id]

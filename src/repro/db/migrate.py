@@ -122,6 +122,12 @@ def migrate(cluster, new_index: HotIndex,
         n.log("write", mig_tid, key=key, old=n.store[key], new=val)
         n.store[key] = val
 
+    # crash point: between migrate_begin and migrate_end the evicted keys
+    # are authoritative in their home stores (partial availability) and
+    # the old placement still stands — recovery abandons the migration
+    cluster._fault("mid_migration", evicted=[k for k, _ in plan.evict],
+                   mig_tid=mig_tid)
+
     # load: rebuild the register file under the new placement.  Staying
     # and moved tuples carry their live switch value; newly-hot tuples
     # come from their home node's store.
@@ -141,7 +147,10 @@ def migrate(cluster, new_index: HotIndex,
     for n in cluster.nodes:
         n.log("migrate_end", mig_tid, epoch=epoch)
         n.log("commit", mig_tid)
-    cluster.snapshot_offload()
+    # migration-boundary checkpoint: diff-only, so its cost is bounded by
+    # the plan size (+ writes since the previous checkpoint), not the
+    # hot-set size — the incremental-migration follow-up subsumed
+    cluster.checkpoint(reason="migration")
     cluster.stats["migrations"] += 1
     cluster.stats["migrated_tuples"] += plan.n_changed
     return plan

@@ -101,6 +101,17 @@ and ``max_batch`` (batched switch admission, PR 2), ``pipeline_depth``
 accesses and 2PC rounds), ``switch_service_rate`` (shared switch
 ingress, this PR) and ``reconfig_interval`` (adaptive re-placement
 epochs, this PR).
+
+Durability mirror (all default-off, zero events when off): ``crash_at``
+crashes the switch once and promotes a warm standby behind a pause of
+``Timing.t_failover`` + ``t_replay_send`` per send since the last
+checkpoint; ``ckpt_interval`` spawns the incremental-checkpoint daemon
+that bounds that replay debt; ``gate_t_reconfig`` mirrors the
+functional EpochController's cost-benefit migration gate; and
+``partial_availability`` lets txns whose hot keys were all evicted by
+a pending re-placement demote to the cold path (home-store reads)
+instead of waiting out the migration pause — the DES answer to "what
+does a switch crash cost at load X".
 """
 from __future__ import annotations
 
@@ -136,6 +147,12 @@ class Timing:
                                       # (drain + register copy-out/in +
                                       # index swap); only charged when
                                       # reconfig_interval > 0
+    t_failover: float = 300e-6        # warm-standby promotion pause on a
+                                      # switch crash: detection + route
+                                      # flip; only charged when crash_at>0
+    t_replay_send: float = 0.5e-6     # per post-checkpoint send replayed
+                                      # into the standby at takeover — the
+                                      # term ckpt_interval bounds
 
 
 @dataclass
@@ -174,6 +191,26 @@ class SystemConfig:
                                       # re-placement epochs (dynamic-
                                       # workload mode only); 0 = static
                                       # placement, controller never spawns
+    crash_at: float = 0.0             # sim-time of a switch crash followed
+                                      # by warm-standby failover: outage =
+                                      # t_failover + replayed sends *
+                                      # t_replay_send; 0 = never (the
+                                      # pre-durability model, zero events)
+    ckpt_interval: float = 0.0        # seconds between incremental
+                                      # checkpoints feeding the standby —
+                                      # bounds the replayed-send term of a
+                                      # failover; 0 = no checkpointing
+    gate_t_reconfig: float = 0.0      # sim mirror of the functional
+                                      # EpochController cost-benefit gate:
+                                      # migrate only when the projected
+                                      # hot-share gain over the next epoch
+                                      # outweighs this pause cost (s);
+                                      # 0 = ungated (the PR 4 controller)
+    partial_availability: bool = False  # during a migration pause, txns
+                                      # whose hot keys were ALL evicted by
+                                      # the pending re-placement demote to
+                                      # the cold path (home-store reads)
+                                      # instead of waiting out the pause
 
 
 @dataclass
@@ -268,7 +305,17 @@ class ClusterSim:
         self.tracker = tracker
         self._ctl_rng = np.random.default_rng(seed + 0x5EED)
         self.pause_until = 0.0        # switch unavailable during migration
+        self.pause_reason = "reconfig"   # label pause waits are charged to
         self.reconfigs = 0
+        # durability mirror (crash_at / ckpt_interval / gate / partial
+        # availability — all default-off, adding zero events when off)
+        self._sends_since_ckpt = 0
+        self.ckpts_taken = 0
+        self.failover: Optional[dict] = None
+        self.reconfigs_gated = 0
+        self._evicted_during_pause: set = set()
+        self.partial_served = 0
+        self._last_traces: list = []
         self.phase_commits = collections.Counter()   # (phase, klass) -> n
         # batched switch admission (see module docstring): per-txn rounds
         # when batch_window=0, max_batch=1 and pipeline_depth=1 — the
@@ -327,10 +374,30 @@ class ClusterSim:
             ph = self.dynamic.phase_of(sim.now)
             self.phase_commits[(ph, prof.klass)] += 1
 
+    def _demote_if_evicted(self, prof: TxnProfile) -> TxnProfile:
+        """Partial availability during a migration pause: a txn whose hot
+        keys were ALL evicted by the pending re-placement reads them from
+        their authoritative home-node stores (the migration wrote evicted
+        registers back before the pause) — it demotes to the cold path
+        and commits instead of waiting out the pause."""
+        if not (self.sys.partial_availability
+                and self._evicted_during_pause
+                and prof.klass != "cold"
+                and self.sim.now < self.pause_until):
+            return prof
+        hot_keys = [k for k, _, _ in prof.hot_ops]
+        if not hot_keys or not all(k in self._evicted_during_pause
+                                   for k in hot_keys):
+            return prof
+        self.partial_served += 1
+        return TxnProfile(
+            prof.kind, "cold", [], prof.cold_ops + prof.hot_ops, prof.home,
+            prof.participants | {n for _, n, _ in prof.hot_ops}, 1)
+
     def worker(self, node: int):
         sim, T = self.sim, self.T
         while True:
-            prof = self._draw(node)
+            prof = self._demote_if_evicted(self._draw(node))
             t0 = sim.now
             self._ts += 1
             ts = self._ts
@@ -434,12 +501,16 @@ class ClusterSim:
             yield from self._nic_xfer(node, n_msgs)
 
     def _reconfig_gate(self):
-        """Hold switch traffic while a re-placement epoch has the switch
-        paused.  Yields nothing when no pause is active — with the
-        controller off this is a no-op call, adding zero events."""
+        """Hold switch traffic while a re-placement epoch (or a failover
+        in progress) has the switch paused.  Yields nothing when no pause
+        is active — with the controller off this is a no-op call, adding
+        zero events.  The wait is charged to the cause of the pause:
+        ``reconfig_wait`` (the default, label-identical to pre-durability
+        runs) or ``failover_wait`` while a crashed switch's standby is
+        being promoted."""
         wait = self.pause_until - self.sim.now
         if wait > 0:
-            self._charge("reconfig_wait", wait)
+            self._charge(f"{self.pause_reason}_wait", wait)
             yield ("delay", wait)
 
     def _ingress_admit(self, n_pkts: int):
@@ -494,6 +565,7 @@ class ClusterSim:
             yield from self._nic_xfer(node, len(items))       # RX burst
         self.rounds += 1
         self.round_txns += len(items)
+        self._sends_since_ckpt += len(items)
 
     def switch_txn(self, prof: TxnProfile, node: Optional[int] = None):
         T = self.T
@@ -519,6 +591,7 @@ class ClusterSim:
         yield ("delay", T.rtt_switch / 2)
         if self.sys.nic_line_rate > 0:
             yield from self._nic_xfer(node, 1)                # RX
+        self._sends_since_ckpt += 1
 
     def cold_part(self, prof: TxnProfile, ts: int, include_hot=False):
         T = self.T
@@ -591,19 +664,79 @@ class ClusterSim:
             new_hi = self._recompute_placement()
             if new_hi is None:
                 continue
-            if set(new_hi.placement.slot) == \
-                    set(self.hot_index.placement.slot):
+            old_keys = set(self.hot_index.placement.slot)
+            new_keys = set(new_hi.placement.slot)
+            if new_keys == old_keys:
                 # hot-set membership unchanged: nothing to migrate, no
                 # switch pause — steady-state epochs are free, so a short
                 # interval tracks drift without constant downtime
                 continue
+            if self.sys.gate_t_reconfig > 0 and \
+                    not self._gate_passes(new_hi):
+                # cost-benefit gate (mirror of the functional
+                # EpochController): the projected hot-share gain over the
+                # next epoch does not pay for the pause — skip
+                self.reconfigs_gated += 1
+                continue
             # the migration pauses the switch: drain + register
-            # copy-out/copy-in + replicated index swap (t_reconfig)
+            # copy-out/copy-in + replicated index swap (t_reconfig);
+            # evicted keys stay readable from their home stores meanwhile
+            # (partial availability, when enabled)
+            self._evicted_during_pause = old_keys - new_keys
             self.pause_until = self.sim.now + self.T.t_reconfig
             self._charge("reconfig", self.T.t_reconfig)
             yield ("delay", self.T.t_reconfig)
+            self._evicted_during_pause = set()
             self.hot_index = new_hi
             self.reconfigs += 1
+
+    def _gate_passes(self, new_hi: HotIndex) -> bool:
+        """Sim mirror of ``EpochController.projected_gain``: over the
+        observed trace window, the fraction of txns that are fully hot
+        under the new placement minus the fraction under the current one
+        is the throughput share the migration recovers; scaled by the
+        epoch length it must beat the ``gate_t_reconfig`` pause (both
+        sides are per-txn-rate, so the rate cancels)."""
+        traces = self._last_traces
+        if not traces:
+            return True
+        old_slot = self.hot_index.placement.slot
+        new_slot = new_hi.placement.slot
+        old_hot = sum(1 for tr in traces
+                      if tr and all(k in old_slot for k, _ in tr))
+        new_hot = sum(1 for tr in traces
+                      if tr and all(k in new_slot for k, _ in tr))
+        gain = (new_hot - old_hot) / len(traces) \
+            * self.sys.reconfig_interval
+        return gain > self.sys.gate_t_reconfig
+
+    # ------------------------------------------------ durability mirror --
+    def _ckpt_daemon(self):
+        """Incremental checkpoints feeding the warm standby: each one
+        resets the replay debt a failover would pay.  The checkpoint
+        itself is diff-only and off the critical path (no pause)."""
+        while True:
+            yield ("delay", self.sys.ckpt_interval)
+            self._sends_since_ckpt = 0
+            self.ckpts_taken += 1
+
+    def _crash_daemon(self):
+        """One switch crash at ``crash_at``: the warm standby is promoted
+        behind a pause of ``t_failover`` (detection + route flip) plus
+        ``t_replay_send`` per send logged since the last checkpoint —
+        the functional ``Cluster.fail_over`` bounded-recovery contract,
+        priced."""
+        yield ("delay", self.sys.crash_at)
+        replayed = self._sends_since_ckpt
+        outage = self.T.t_failover + replayed * self.T.t_replay_send
+        self.failover = dict(at=self.sim.now, outage=outage,
+                             replayed=replayed)
+        self.pause_until = max(self.pause_until, self.sim.now + outage)
+        self.pause_reason = "failover"
+        self._charge("failover", outage)
+        yield ("delay", outage)
+        self.pause_reason = "reconfig"
+        self._sends_since_ckpt = 0
 
     def _recompute_placement(self) -> Optional[HotIndex]:
         k = self.reconfig_top_k
@@ -621,6 +754,7 @@ class ClusterSim:
             traces = self.tracker.window_traces()
             hot = self.tracker.top_k(k)
             self.tracker.advance_epoch()
+        self._last_traces = traces      # the gate's evidence window
         placement = layout_for_hotset(traces, hot, self.switch_cfg,
                                       seed=self._layout_seed)
         if not placement.slot:
@@ -644,6 +778,10 @@ class ClusterSim:
                 self.sim.spawn(g, delay=float(self.rng.random() * 1e-6))
         if self._reconfig_on:
             self.sim.spawn(self._controller())
+        if self.sys.ckpt_interval > 0:
+            self.sim.spawn(self._ckpt_daemon())
+        if self.sys.crash_at > 0:
+            self.sim.spawn(self._crash_daemon())
         self.sim.run(self.sim_time)
         window = self.sim_time - self.warmup
         tput = self.commits["total"] / window
@@ -655,6 +793,15 @@ class ClusterSim:
                    if self.rounds else 0.0)
         for k in self.lat_n:
             out[f"lat_{k}"] = self.lat_sum[k] / max(self.lat_n[k], 1)
+        # durability keys appear only when the knob is on — the default
+        # result dict stays byte-identical to the golden pins
+        if self.sys.crash_at > 0:
+            out["failover"] = self.failover
+            out["ckpts_taken"] = self.ckpts_taken
+        if self.sys.gate_t_reconfig > 0:
+            out["reconfigs_gated"] = self.reconfigs_gated
+        if self.sys.partial_availability:
+            out["partial_served"] = self.partial_served
         if self.dynamic is not None:
             # dynamic-mode keys only — the static result dict must stay
             # byte-identical to the golden pins

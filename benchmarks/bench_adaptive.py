@@ -130,8 +130,7 @@ def functional_section(fast: bool):
 
     def value(cl, k):
         if cl.use_switch and cl.hot_index.is_hot(k):
-            s, r = cl.hot_index.slot(k)
-            return int(np.asarray(cl.switch.registers)[s, r])
+            return cl.switch.read_value(cl.hot_index.slot(k))
         return cl.nodes[node_of(k)].store[k]
 
     keys = {k for b in batches for t in b for k in t.keys()}

@@ -394,6 +394,8 @@ SUMMARY_HEADLINES = [
      "async hot path vs the PR 1 batched path (functional, PR 5)"),
     ("BENCH_durability.json", ("headline_recovery_speedup",),
      "bounded recovery: checkpointed vs full-WAL replay (PR 6)"),
+    ("BENCH_multiswitch.json", ("headline_multiswitch_speedup",),
+     "sharded 4-switch plane vs capacity-capped 1 switch (PR 7)"),
 ]
 
 

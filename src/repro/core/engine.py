@@ -82,7 +82,7 @@ import numpy as np
 
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
                                 N_PLANES, PacketStager, SwitchConfig,
-                                result_plane)
+                                result_plane, shard_rows)
 
 
 def init_registers(cfg: SwitchConfig, values: Optional[np.ndarray] = None):
@@ -246,17 +246,25 @@ def _fused_engine_impl(mode: str, Mp: int):
     return run
 
 
-def _compiled_engine(mode: str, S: int, R: int, B: int, K: int, M: int):
-    key = (mode, S, R, B, K, M)
+def _compiled_engine(mode: str, S: int, R: int, B: int, K: int, M: int,
+                     dev=None):
+    key = (mode, S, R, B, K, M, dev)
     fn = _DISPATCH_CACHE.get(key)
     if fn is None:
+        if dev is None:
+            spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+        else:
+            # per-shard AOT: lower for the plane's own device so each
+            # shard's executable runs (and donates) on its own buffer
+            sharding = jax.sharding.SingleDeviceSharding(dev)
+            spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32,
+                                                      sharding=sharding)
         with warnings.catch_warnings():
             # register donation is a no-op on CPU; silence the advisory
             warnings.filterwarnings("ignore", message="Some donated buffers")
             fn = jax.jit(_fused_engine_impl(mode, M),
                          donate_argnums=0).lower(
-                jax.ShapeDtypeStruct((S, R), jnp.int32),
-                jax.ShapeDtypeStruct((N_PLANES, B, K), jnp.int32)).compile()
+                spec((S, R)), spec((N_PLANES, B, K))).compile()
         _DISPATCH_CACHE[key] = fn
     return fn
 
@@ -343,9 +351,14 @@ class SwitchEngine:
     exactly one."""
 
     def __init__(self, cfg: SwitchConfig, registers=None,
-                 stager_pool: int = 4, async_dispatch: bool = False):
+                 stager_pool: int = 4, async_dispatch: bool = False,
+                 device=None):
         self.cfg = cfg
-        self.registers = init_registers(cfg, registers)
+        # ``device`` pins this engine's register buffer (and every compiled
+        # call) to one device of the mesh — the per-shard plane of a
+        # ShardedSwitchEngine; None keeps the default-device behavior
+        self._device = device
+        self.registers = self._put(init_registers(cfg, registers))
         self.next_gid = 0
         self.dispatch_count = 0
         # reusable host staging buffers (one fused H2D per dispatch); the
@@ -359,6 +372,9 @@ class SwitchEngine:
         self._pool = None
         self._last_fut = None
         self._defer_futs = collections.deque()   # submitted, not yet run
+
+    def _put(self, x):
+        return x if self._device is None else jax.device_put(x, self._device)
 
     # ------------------------------------------------ dispatch thread --
     def _submit(self, job, defer: bool):
@@ -431,7 +447,7 @@ class SwitchEngine:
 
     def execute_batch(self, pkts: Dict[str, np.ndarray],
                       meta: Optional[dict] = None, mode: str = "auto",
-                      defer: bool = False) -> PendingBatch:
+                      defer: bool = False, gids=None) -> PendingBatch:
         """The batched hot path: execute all B packets in one device
         dispatch (serial order = batch order) and return an opaque
         ``PendingBatch`` handle WITHOUT forcing materialization.
@@ -462,7 +478,13 @@ class SwitchEngine:
             meta = scan_flags(pkts)
         mode = self._resolve_mode(mode, meta["has_cadd"], meta["has_addp"],
                                   meta["addp_unsafe"])
-        gids = np.arange(self.next_gid, self.next_gid + B, dtype=np.int64)
+        if gids is None:
+            gids = np.arange(self.next_gid, self.next_gid + B,
+                             dtype=np.int64)
+        else:
+            # explicit gids: the caller (a sharding facade) owns the global
+            # serial order and hands each sub-dispatch its rows' ids
+            gids = np.asarray(gids, np.int64)
         if B == 0:
             return PendingBatch(np.zeros((0, K), np.int32),
                                 np.zeros((0, K), bool),
@@ -486,7 +508,7 @@ class SwitchEngine:
                 from repro.kernels.switch_txn import ops as ktx
                 # jnp.array (copy=True): the staging buffer is recycled,
                 # so the device buffer must never alias host memory
-                fused = jnp.array(staged)
+                fused = self._put(jnp.array(staged))
                 regs, res, ok = ktx.switch_exec(self.registers, fused[0],
                                                 fused[1], fused[2],
                                                 fused[3])
@@ -495,16 +517,16 @@ class SwitchEngine:
                 self.registers = regs
                 return regs, res, ok, compact
         else:
-            fn = _compiled_engine(mode, S, R, Bp, K, Mp)
+            fn = _compiled_engine(mode, S, R, Bp, K, Mp, self._device)
 
             def job():
-                fused = jnp.array(staged)
+                fused = self._put(jnp.array(staged))
                 regs, res, ok, compact = fn(self.registers, fused)
                 self.registers = regs
                 return regs, res, ok, compact
 
         self.dispatch_count += 1
-        self.next_gid += B
+        self.next_gid = max(self.next_gid, int(gids[-1]) + 1)
         out, fut = self._submit(job, defer)
         if fut is not None:
             return PendingBatch(None, None, None, gids, B, K, base, idx,
@@ -526,5 +548,287 @@ class SwitchEngine:
         # init_registers copies: the register buffer is donated to later
         # compiled calls, so the restored snapshot (a checkpoint the warm
         # standby may restore from repeatedly) must never be aliased
-        self.registers = init_registers(self.cfg, regs)
+        self.registers = self._put(init_registers(self.cfg, regs))
         self.next_gid = gid
+
+    def load_registers(self, values):
+        """Replace the whole register file ([S, R] host array) — the bulk
+        path migration/restore uses; copies, never aliases the input."""
+        self._join()
+        self.registers = self._put(init_registers(self.cfg, values))
+
+    def read_value(self, slot) -> int:
+        """Read one register by placement slot ((switch, stage, reg) or
+        legacy (stage, reg); a plain engine IS switch 0)."""
+        *sw, s, r = slot
+        return int(self.read_all()[s, r])
+
+
+class ShardedSwitchEngine:
+    """N-switch register plane: one ``SwitchEngine`` per shard, each with
+    its own donated device buffer (pinned to one device of the JAX mesh
+    when several are available), its own AOT dispatch cache and its own
+    dispatch thread.
+
+    A batch arrives with the global-stage encoding (``stage = switch *
+    n_stages + stage``; see ``packets.build_packets``).  Rows that live
+    entirely on one shard are grouped per shard — preserving per-shard
+    admission order — and dispatched concurrently (different shards touch
+    disjoint registers, so their rows commute in the serial order).  A
+    cross-shard row is a barrier: pending groups flush first, then its ops
+    execute one mini-dispatch at a time in slot order, forwarding ADDP
+    operands across shards on the host (the model of an inter-switch hop
+    per dependency).
+
+    The facade owns the GLOBAL gid sequence — sub-dispatches receive their
+    rows' ids explicitly — so results, WAL entries and recovery replay
+    order are identical to a single switch executing the same admission
+    order.  With ``n_switches == 1`` every call delegates verbatim to the
+    single plane: the sharded path is byte-identical to ``SwitchEngine``
+    by construction (regression-pinned)."""
+
+    def __init__(self, cfg: SwitchConfig, registers=None,
+                 stager_pool: int = 4, async_dispatch: bool = False):
+        from dataclasses import replace
+        self.cfg = cfg
+        self.n = cfg.n_switches
+        self.async_dispatch = bool(async_dispatch)
+        self.next_gid = 0
+        devs = jax.devices()
+        use_dev = self.n > 1 and len(devs) > 1
+        plane_cfg = replace(cfg, n_switches=1)
+        if registers is not None:
+            regs = np.asarray(registers)
+            if regs.ndim == 2:
+                regs = regs[None] if self.n == 1 else None
+            if regs is None or regs.shape[0] != self.n:
+                raise ValueError("registers must be [n_switches, S, R]")
+        self.planes = [
+            SwitchEngine(plane_cfg,
+                         registers=None if registers is None else regs[i],
+                         stager_pool=stager_pool,
+                         async_dispatch=async_dispatch,
+                         device=devs[i % len(devs)] if use_dev else None)
+            for i in range(self.n)
+        ]
+
+    # ------------------------------------------------------- bookkeeping --
+    @property
+    def dispatch_count(self) -> int:
+        return sum(p.dispatch_count for p in self.planes)
+
+    @property
+    def registers(self):
+        if self.n == 1:
+            return self.planes[0].registers
+        return jnp.stack([jnp.asarray(p.read_all()) for p in self.planes])
+
+    @registers.setter
+    def registers(self, values):
+        self.load_registers(np.asarray(values))
+
+    def _join(self):
+        for p in self.planes:
+            p._join()
+
+    # --------------------------------------------------------- execution --
+    def execute(self, pkts: Dict[str, np.ndarray], mode: str = "auto"
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        pb = self.execute_batch(pkts, meta=None, mode=mode)
+        return pb.results_np(), np.asarray(pb.ok_np()), pb.gids
+
+    def execute_batch(self, pkts: Dict[str, np.ndarray],
+                      meta: Optional[dict] = None, mode: str = "auto",
+                      defer: bool = False, gids=None):
+        if self.n == 1:
+            pb = self.planes[0].execute_batch(pkts, meta, mode=mode,
+                                              defer=defer, gids=gids)
+            self.next_gid = self.planes[0].next_gid
+            return pb
+        op_np = np.asarray(pkts["op"], np.int32)
+        B, K = op_np.shape
+        if meta is None:
+            from repro.core.packets import scan_flags
+            meta = scan_flags(pkts)
+        shard = meta.get("shard")
+        if shard is None:
+            shard = shard_rows(pkts, self.cfg)
+        # one mode for the whole batch, resolved exactly like the single
+        # switch would (explicit modes validate against whole-batch flags)
+        mode = SwitchEngine._resolve_mode(
+            mode, meta["has_cadd"], meta["has_addp"], meta["addp_unsafe"])
+        if gids is None:
+            gids = np.arange(self.next_gid, self.next_gid + B,
+                             dtype=np.int64)
+        else:
+            gids = np.asarray(gids, np.int64)
+        if B == 0:
+            return PendingBatch(np.zeros((0, K), np.int32),
+                                np.zeros((0, K), bool),
+                                np.zeros(0, np.int32), gids, 0, K,
+                                np.zeros((0, K), np.int32),
+                                np.zeros(0, np.int32), mode)
+        self.next_gid = max(self.next_gid, int(gids.max()) + 1)
+
+        stage_np = np.asarray(pkts["stage"], np.int32)
+        reg_np = np.asarray(pkts["reg"], np.int32)
+        val_np = np.asarray(pkts["operand"], np.int32)
+        S = self.cfg.n_stages
+        flags = dict(has_cadd=meta["has_cadd"], has_addp=meta["has_addp"],
+                     addp_unsafe=meta["addp_unsafe"])
+        parts = []
+        pend: Dict[int, list] = {}
+
+        def flush():
+            for sw in sorted(pend):
+                ridx = np.asarray(pend[sw])
+                sub_op = op_np[ridx]
+                # global stage -> this shard's local pipeline stage
+                sub = dict(op=sub_op,
+                           stage=np.where(sub_op != NOP,
+                                          stage_np[ridx] - sw * S,
+                                          0).astype(np.int32),
+                           reg=reg_np[ridx], operand=val_np[ridx])
+                base, idx = result_plane(sub)
+                sub_meta = dict(flags, res_base=base, gather_idx=idx)
+                pb = self.planes[sw].execute_batch(
+                    sub, sub_meta, mode=mode,
+                    defer=self.async_dispatch, gids=gids[ridx])
+                parts.append((ridx, pb, None, None))
+            pend.clear()
+
+        for i in range(B):
+            sh = int(shard[i])
+            if sh >= 0:
+                pend.setdefault(sh, []).append(i)
+                continue
+            flush()        # barrier: a cross-shard row sees every earlier
+            res_row, ok_row = self._exec_cross_row(   # row's effects
+                op_np[i], stage_np[i], reg_np[i], val_np[i], int(gids[i]))
+            parts.append((np.array([i]), None, res_row, ok_row))
+        flush()
+
+        handle = _MergedBatch(gids, B, K, parts, mode)
+        if not defer and self.async_dispatch:
+            handle.block()     # non-deferred contract: work is done on
+        return handle          # return, matching SwitchEngine._submit
+
+    def _exec_cross_row(self, op, stage, reg, val, gid):
+        """Execute one cross-shard packet op-by-op in slot order: each op
+        is a B=1 serial mini-dispatch on its shard, and ADDP operands are
+        resolved on the host from the already-known earlier results (the
+        inter-switch result forwarding a real deployment would do with a
+        recirculating hop per dependency)."""
+        K = len(op)
+        S = self.cfg.n_stages
+        res = np.zeros(K, np.int32)
+        ok = np.ones(K, bool)
+        for k in range(K):
+            o = int(op[k])
+            if o == NOP:
+                continue
+            sw, s_loc = divmod(int(stage[k]), S)
+            v = int(val[k])
+            if o == ADDP:       # source result is already materialized:
+                o, v = ADD, int(res[min(max(int(val[k]), 0), K - 1)])
+            mini = dict(op=np.array([[o]], np.int32),
+                        stage=np.array([[s_loc]], np.int32),
+                        reg=np.array([[int(reg[k])]], np.int32),
+                        operand=np.array([[v]], np.int32))
+            pb = self.planes[sw].execute_batch(
+                mini, mode="serial", gids=np.array([gid], np.int64))
+            res[k] = int(pb.results_np()[0, 0])
+            ok[k] = bool(pb.ok_np()[0, 0])
+        return res, ok
+
+    # ------------------------------------------------------ state access --
+    def read_all(self) -> np.ndarray:
+        """[S, R] with one shard, [N, S, R] stacked otherwise."""
+        if self.n == 1:
+            return self.planes[0].read_all()
+        return np.stack([p.read_all() for p in self.planes])
+
+    def snapshot(self):
+        if self.n == 1:
+            snap = self.planes[0].snapshot()
+            self.next_gid = self.planes[0].next_gid
+            return snap
+        return self.read_all().copy(), self.next_gid
+
+    def restore(self, snap):
+        regs, gid = snap
+        if self.n == 1:
+            self.planes[0].restore(snap)
+        else:
+            regs = np.asarray(regs)
+            for i, p in enumerate(self.planes):
+                p.restore((regs[i], gid))
+        self.next_gid = gid
+
+    def load_registers(self, values):
+        values = np.asarray(values)
+        if self.n == 1:
+            self.planes[0].load_registers(
+                values if values.ndim == 2 else values[0])
+            return
+        if values.ndim != 3 or values.shape[0] != self.n:
+            raise ValueError("expected [n_switches, S, R] register stack")
+        for i, p in enumerate(self.planes):
+            p.load_registers(values[i])
+
+    def read_value(self, slot) -> int:
+        sw, s, r = (0, *slot) if len(slot) == 2 else slot
+        plane = self.planes[sw]
+        return int(plane.read_all()[s, r])
+
+
+class _MergedBatch:
+    """PendingBatch-compatible handle over a sharded dispatch: the per-
+    shard sub-batches' compacted results scatter back into the caller's
+    [B, K] plane on drain; cross-shard rows carry their (already
+    materialized) per-op results inline."""
+
+    __slots__ = ("gids", "B", "K", "mode", "_parts", "_res_np", "_ok_np")
+
+    def __init__(self, gids, B, K, parts, mode="auto"):
+        # parts: (row_idx [b], PendingBatch | None, res_row, ok_row)
+        self.gids, self.B, self.K, self.mode = gids, B, K, mode
+        self._parts = parts
+        self._res_np = None
+        self._ok_np = None
+
+    def _materialize(self):
+        if self._res_np is None:
+            res = np.zeros((self.B, self.K), np.int32)
+            ok = np.ones((self.B, self.K), bool)
+            for rows, pb, res_row, ok_row in self._parts:
+                if pb is not None:
+                    res[rows] = pb.results_np()
+                    ok[rows] = pb.ok_np()
+                else:
+                    res[rows[0]] = res_row
+                    ok[rows[0]] = ok_row
+            self._res_np, self._ok_np = res, ok
+
+    def results_np(self) -> np.ndarray:
+        self._materialize()
+        return self._res_np
+
+    def ok_np(self) -> np.ndarray:
+        self._materialize()
+        return self._ok_np
+
+    def block(self):
+        for _, pb, _, _ in self._parts:
+            if pb is not None:
+                pb.block()
+        return self
+
+    def ready(self) -> bool:
+        return self._res_np is not None
+
+    def __iter__(self):
+        self._materialize()
+        yield jnp.asarray(self._res_np)
+        yield jnp.asarray(self._ok_np)
+        yield self.gids

@@ -1,7 +1,7 @@
 """Offline hot-set detection (paper §3.1): replay a representative workload
 statement-by-statement, count per-tuple access frequencies, offload the
-top-k to the switch.  The resulting hot index (tuple -> (stage, reg)) is
-replicated to every database node's partition manager."""
+top-k to the switch.  The resulting hot index (tuple -> (switch, stage,
+reg)) is replicated to every database node's partition manager."""
 from __future__ import annotations
 
 import collections
@@ -34,15 +34,18 @@ class HotIndex:
 
     Besides the dict interface, the index exposes sorted numpy lookup
     arrays (built lazily, cached) so the batched packet builder can map
-    whole key vectors to (stage, reg) slots with one ``searchsorted`` —
-    no per-key Python dict probes on the hot path."""
+    whole key vectors to (switch, stage, reg) slots with one
+    ``searchsorted`` — no per-key Python dict probes on the hot path."""
     placement: Placement
     _keys: Optional[np.ndarray] = field(default=None, repr=False,
                                         compare=False)
+    _switches: Optional[np.ndarray] = field(default=None, repr=False,
+                                            compare=False)
     _stages: Optional[np.ndarray] = field(default=None, repr=False,
                                           compare=False)
     _regs: Optional[np.ndarray] = field(default=None, repr=False,
                                         compare=False)
+    _cache_token: object = field(default=None, repr=False, compare=False)
 
     def is_hot(self, tuple_id) -> bool:
         return tuple_id in self.placement.slot
@@ -60,14 +63,19 @@ class HotIndex:
 
     # ------------------------------------------------- vectorized lookup --
     def _ensure_arrays(self):
-        # rebuilt when placement.slot grows/shrinks; in-place *moves* of
-        # existing keys are not detected — placements are treated as frozen
-        # after construction (re-layout builds a new HotIndex)
-        if self._keys is None or self._keys.size != len(self.placement.slot):
-            items = sorted(self.placement.slot.items())
-            self._keys = np.array([k for k, _ in items], np.int64)
-            self._stages = np.array([s for _, (s, _) in items], np.int32)
-            self._regs = np.array([r for _, (_, r) in items], np.int32)
+        # invalidate on the placement-dict *version*, not its size: a
+        # same-size in-place re-placement (rotating hotspot under epoch
+        # re-placement / shard rebalancing) must not serve stale slots
+        slot = self.placement.slot
+        token = (id(slot), getattr(slot, "version", None))
+        if self._keys is None or self._cache_token != token:
+            items = sorted(slot.items())
+            norm = [(k, s if len(s) == 3 else (0, *s)) for k, s in items]
+            self._keys = np.array([k for k, _ in norm], np.int64)
+            self._switches = np.array([w for _, (w, _, _) in norm], np.int32)
+            self._stages = np.array([s for _, (_, s, _) in norm], np.int32)
+            self._regs = np.array([r for _, (_, _, r) in norm], np.int32)
+            self._cache_token = token
 
     def hot_mask_np(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized ``is_hot`` over a key vector."""
@@ -82,19 +90,20 @@ class HotIndex:
     def slots_np(self, keys: np.ndarray):
         """Vectorized ``slot`` over a key vector of hot tuples.
 
-        Returns (stage [n], reg [n]) int32 arrays; raises KeyError if any
-        key is not hot (mirrors the dict lookup)."""
+        Returns (switch [n], stage [n], reg [n]) int32 arrays; raises
+        KeyError if any key is not hot (mirrors the dict lookup)."""
         self._ensure_arrays()
         keys = np.asarray(keys, np.int64)
         if keys.size == 0:
-            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+            z = np.zeros(0, np.int32)
+            return z, z.copy(), z.copy()
         idx = np.searchsorted(self._keys, keys) if self._keys.size else None
         if idx is None or (idx >= self._keys.size).any() or \
                 (self._keys[np.minimum(idx, self._keys.size - 1)]
                  != keys).any():
             missing = keys[~self.hot_mask_np(keys)]
             raise KeyError(f"keys not in hot index: {missing[:4].tolist()}")
-        return self._stages[idx], self._regs[idx]
+        return self._switches[idx], self._stages[idx], self._regs[idx]
 
 
 def layout_for_hotset(traces, hot, switch: SwitchConfig,

@@ -43,9 +43,16 @@ class SwitchConfig:
     n_stages: int = 20
     regs_per_stage: int = 65536      # ~820K 8B tuples/pipe (paper §2.3) / 16
     max_instrs: int = 8
+    n_switches: int = 1              # shards in the register plane; hot
+                                     # capacity and dispatch bandwidth both
+                                     # scale with this (P4DB §8 scale-out)
 
     @property
     def total_slots(self):
+        return self.n_switches * self.n_stages * self.regs_per_stage
+
+    @property
+    def slots_per_switch(self):
         return self.n_stages * self.regs_per_stage
 
 
@@ -147,11 +154,20 @@ def build_packets(txns, hot_index, cfg: SwitchConfig):
     stage so the declustered layout yields single-pass packets; all others
     keep program order.
 
+    Multi-switch encoding: with ``cfg.n_switches > 1`` the packet ``stage``
+    field carries the GLOBAL stage id ``switch * n_stages + stage`` — the
+    sharded pipeline viewed as one long pipeline — so the packet format
+    (and the fused staging-buffer layout) is unchanged; the sharded engine
+    decodes ``stage // n_stages`` to route rows, and single-switch configs
+    are byte-identical to the pre-sharding encoding.
+
     Returns ``(pkts, meta)`` where meta carries:
       * ``has_cadd`` / ``has_addp`` — batch opcode presence, so the engine
         can pick its execution path without re-scanning arrays on host,
       * ``n_ops`` [B] — instruction count per packet,
-      * ``order`` [B, K] — packet slot -> txn op index permutation.
+      * ``order`` [B, K] — packet slot -> txn op index permutation,
+      * ``shard`` [B] — per-txn switch id, or -1 for a cross-shard txn
+        (ops spanning multiple switches).
     """
     B = len(txns)
     K = cfg.max_instrs
@@ -162,7 +178,8 @@ def build_packets(txns, hot_index, cfg: SwitchConfig):
                           n_ops=np.zeros(0, np.int64),
                           order=np.zeros((0, K), np.int64),
                           res_base=np.zeros((0, K), np.int32),
-                          gather_idx=np.zeros(0, np.int32))
+                          gather_idx=np.zeros(0, np.int32),
+                          shard=np.zeros(0, np.int32))
     n_ops = np.fromiter((len(t.ops) for t in txns), np.int64, B)
     if n_ops.max(initial=0) > K:
         raise ValueError(f"txn with > max_instrs={K} ops")
@@ -176,7 +193,15 @@ def build_packets(txns, hot_index, cfg: SwitchConfig):
     row = np.repeat(np.arange(B), n_ops)
     offsets = np.cumsum(n_ops) - n_ops
     pos = np.arange(len(flat)) - np.repeat(offsets, n_ops)
-    stage, reg = hot_index.slots_np(keys)
+    switch, stage, reg = hot_index.slots_np(keys)
+    stage = (switch * cfg.n_stages + stage).astype(np.int32)  # global stage
+    # per-txn shard id (-1 when a txn's ops span multiple switches)
+    smin = np.full(B, np.iinfo(np.int32).max, np.int32)
+    smax = np.zeros(B, np.int32)
+    np.minimum.at(smin, row, switch)
+    np.maximum.at(smax, row, switch)
+    shard = np.where(n_ops == 0, 0,
+                     np.where(smin == smax, smax, -1)).astype(np.int32)
 
     # reorderable txns: unique keys and no ADDP (layout.trace_reorderable)
     by_key = np.lexsort((keys, row))
@@ -205,7 +230,8 @@ def build_packets(txns, hot_index, cfg: SwitchConfig):
                 has_addp=bool(has_addp_row.any()),
                 addp_unsafe=addp_needs_serial(pkts),
                 n_ops=n_ops, order=order,
-                res_base=base, gather_idx=gather_idx)
+                res_base=base, gather_idx=gather_idx,
+                shard=shard)
     return pkts, meta
 
 
@@ -265,6 +291,20 @@ class PacketStager:
         flat[:len(idx)] = idx
         flat[len(idx):Mp] = 0                     # pad gathers hit slot 0
         return buf
+
+
+def shard_rows(p: Dict[str, np.ndarray], cfg: SwitchConfig) -> np.ndarray:
+    """Per-row switch id [B] decoded from the global-stage encoding
+    (``stage // n_stages``); -1 marks a cross-shard row.  Fallback for
+    packets that arrive without ``build_packets`` meta (per-op builders,
+    tests); all-NOP rows route to shard 0."""
+    op = np.asarray(p["op"])
+    sw = np.asarray(p["stage"]) // cfg.n_stages
+    live = op != NOP
+    smin = np.where(live, sw, cfg.n_switches).min(axis=1, initial=cfg.n_switches)
+    smax = np.where(live, sw, -1).max(axis=1, initial=-1)
+    return np.where(~live.any(axis=1), 0,
+                    np.where(smin == smax, smax, -1)).astype(np.int32)
 
 
 def scan_flags(p: Dict[str, np.ndarray]) -> Dict[str, bool]:

@@ -35,12 +35,14 @@ benchmarks; contention timing lives in repro.sim.  Pieces:
 from __future__ import annotations
 
 import collections
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import SwitchEngine, init_registers
+from repro.core.engine import ShardedSwitchEngine, SwitchEngine, \
+    init_registers
 from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
                                 SwitchConfig, addp_unsafe_rows,
@@ -51,6 +53,12 @@ from repro.db.wal import (DEFAULT_SEGMENT_SIZE, CheckpointStore,
                           SegmentedWAL)
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
+
+# base tid for Cluster.load() fixture writes — disjoint from client txns
+# and from migration tids (which use 1 << 40, see repro.db.migrate).  The
+# counter is PER CLUSTER (not module-global) so two independently built
+# clusters fed the same workload produce byte-identical WALs
+_LOAD_TID_BASE = 1 << 41
 
 
 class Abort(Exception):
@@ -214,6 +222,7 @@ class Cluster:
         # path below is byte-identical to a plain cluster in that case
         self.tracker = None
         self.controller = None
+        self._load_tid = itertools.count(_LOAD_TID_BASE)
         # durability: diff-only checkpoints + (optional) interval trigger,
         # warm standby, armed fault plan.  checkpoint_interval = N > 0
         # takes a checkpoint every N switch sends; 0 = only explicit
@@ -227,14 +236,18 @@ class Cluster:
         self._standby = self._fresh_engine() if standby else None
 
     # ------------------------------------------------------------ setup --
-    def _fresh_engine(self) -> SwitchEngine:
+    def _fresh_engine(self):
         """One source of truth for engine construction (initial setup AND
         post-crash recovery): the staging-buffer pool must outlast the
         in-flight window (+1 for the group being staged, +1 slack for the
-        warm synchronous path)."""
-        return SwitchEngine(self.switch_cfg,
-                            stager_pool=self.max_inflight + 2,
-                            async_dispatch=self.async_hot)
+        warm synchronous path).  A multi-switch config gets the sharded
+        register plane; single-switch configs keep the plain engine (the
+        byte-identity reference the sharded N=1 path is pinned against)."""
+        cls = ShardedSwitchEngine if self.switch_cfg.n_switches > 1 \
+            else SwitchEngine
+        return cls(self.switch_cfg,
+                   stager_pool=self.max_inflight + 2,
+                   async_dispatch=self.async_hot)
 
     @property
     def hot_index(self):
@@ -251,11 +264,28 @@ class Cluster:
             n.hot_index = hi
 
     def load(self, key: int, value: int):
-        self.drain()      # direct register poke: settle in-flight work
-        self.nodes[node_of(key)].store[key] = value
+        """Seed one tuple's committed value (initial population, test
+        fixtures) as a REAL logged write, not a bare register poke: the
+        home node logs write+commit, and a hot key additionally routes
+        through a switch dispatch with send/result WAL entries — so
+        recovery replay, the checkpoint chain and the warm standby all
+        observe the load.  (A direct ``registers.at[].set`` left the
+        standby blind: load-then-``fail_over()`` recovered the stale
+        pre-load value.)"""
+        self.drain()      # register write: settle in-flight work first
+        tid = next(self._load_tid)
+        node = self.nodes[node_of(key)]
+        node.log("write", tid, key=key, old=node.store[key], new=value)
+        node.store[key] = value
+        node.log("commit", tid)
         if self.use_switch and self.hot_index.is_hot(key):
-            s, r = self.hot_index.slot(key)
-            self.switch.registers = self.switch.registers.at[s, r].set(value)
+            txn = Txn("load", [(WRITE, key, value)], node_of(key), tid=tid)
+            pkt, meta = build_packets([txn], self.hot_index, self.switch_cfg)
+            node.log("switch_send", tid, ops=list(txn.ops))
+            pb = self.switch.execute_batch(pkt, meta, mode=self.switch_mode)
+            node.log("switch_result", tid, gid=int(pb.gids[0]),
+                     results=pb.results_np()[0, :1].tolist())
+            self._note_sends(1)
 
     def classify(self, txn: Txn) -> str:
         if not self.use_switch:
@@ -707,8 +737,7 @@ class Cluster:
                 raise SwitchUnavailable(
                     f"hot key {key} lives on the crashed switch")
             self.drain()
-            s, r = self.hot_index.slot(key)
-            return int(self.switch.read_all()[s, r])
+            return self.switch.read_value(self.hot_index.slot(key))
         return self.nodes[node_of(key)].store[key]
 
     # -------------------------------------------------------- recovery --
@@ -739,8 +768,7 @@ class Cluster:
                          key=lambda e: e[1])
         return known, unknown
 
-    def _replay_into(self, engine: SwitchEngine,
-                     reset_registers: bool = True):
+    def _replay_into(self, engine, reset_registers: bool = True):
         """Deterministic replay of the post-checkpoint log suffix into
         ``engine``: seed the registers from the reconstructed checkpoint
         chain (base + diffs — the honest recovery path), then re-execute
@@ -750,11 +778,11 @@ class Cluster:
         if reset_registers:
             base = self.ckpts.reconstruct()
             if base is not None:
-                engine.registers = init_registers(self.switch_cfg, base)
+                engine.load_registers(base)
         for _, _, se in known + unknown:
             t = Txn("replay", [tuple(o) for o in se.payload["ops"]], 0)
-            pkt, _ = self._to_packet(t)
-            engine.execute(pkt)
+            pkt, meta = build_packets([t], self.hot_index, self.switch_cfg)
+            engine.execute_batch(pkt, meta).results_np()
         return len(known), len(unknown)
 
     def crash_switch(self, lose_inflight: bool = True):

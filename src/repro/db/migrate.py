@@ -57,10 +57,12 @@ _MIG_TID = itertools.count(1 << 40)
 
 @dataclass
 class MigrationPlan:
-    """Diff between two placements, in deterministic (sorted-key) order."""
-    evict: List[Tuple[int, Tuple[int, int]]]       # key, old (stage, reg)
-    load: List[Tuple[int, Tuple[int, int]]]        # key, new (stage, reg)
-    moved: List[Tuple[int, Tuple[int, int], Tuple[int, int]]]
+    """Diff between two placements, in deterministic (sorted-key) order.
+    Slots are (switch, stage, reg) — a move may rebalance a tuple across
+    shards, not just across stages."""
+    evict: List[Tuple[int, Tuple[int, int, int]]]  # key, old slot
+    load: List[Tuple[int, Tuple[int, int, int]]]   # key, new slot
+    moved: List[Tuple[int, Tuple[int, int, int], Tuple[int, int, int]]]
     stay: int                                      # same slot in both
 
     @property
@@ -100,8 +102,6 @@ def migrate(cluster, new_index: HotIndex,
     migration is a consistency point, so every outstanding
     ``PendingBatch`` is materialized (WAL ``switch_result`` entries
     filled) before the registers are touched or the index swapped."""
-    from repro.core.engine import init_registers
-
     cluster.drain()
 
     old_index = cluster.hot_index
@@ -114,11 +114,14 @@ def migrate(cluster, new_index: HotIndex,
     for n in cluster.nodes:
         n.log("migrate_begin", mig_tid, epoch=epoch, **plan.summary())
 
-    # evict: live register values return to their home node's store
-    regs = np.asarray(cluster.switch.registers)
-    for key, (s, r) in plan.evict:
+    # evict: live register values return to their home node's store.
+    # regs3 views the register file as [N, S, R] regardless of shard
+    # count, so slot indexing is uniform
+    regs = np.asarray(cluster.switch.read_all())
+    regs3 = regs if regs.ndim == 3 else regs[None]
+    for key, (sw, s, r) in plan.evict:
         n = cluster.nodes[node_of(key)]
-        val = int(regs[s, r])
+        val = int(regs3[sw, s, r])
         n.log("write", mig_tid, key=key, old=n.store[key], new=val)
         n.store[key] = val
 
@@ -129,17 +132,18 @@ def migrate(cluster, new_index: HotIndex,
                    mig_tid=mig_tid)
 
     # load: rebuild the register file under the new placement.  Staying
-    # and moved tuples carry their live switch value; newly-hot tuples
-    # come from their home node's store.
-    S, R = regs.shape
-    new_regs = np.zeros((S, R), np.int32)
-    for key, (s, r) in new_index.placement.slot.items():
+    # and moved tuples carry their live switch value (a cross-shard move
+    # is just a copy between planes); newly-hot tuples come from their
+    # home node's store.
+    new_regs = np.zeros(regs3.shape, np.int32)
+    for key, (sw, s, r) in new_index.placement.slot.items():
         o = old.slot.get(key)
         if o is not None:
-            new_regs[s, r] = regs[o[0], o[1]]
+            new_regs[sw, s, r] = regs3[o[0], o[1], o[2]]
         else:
-            new_regs[s, r] = cluster.nodes[node_of(key)].store[key]
-    cluster.switch.registers = init_registers(cluster.switch_cfg, new_regs)
+            new_regs[sw, s, r] = cluster.nodes[node_of(key)].store[key]
+    cluster.switch.load_registers(
+        new_regs if regs.ndim == 3 else new_regs[0])
 
     # swap the replicated index (the cluster setter fans the new copy
     # out to every node atomically), log the boundary, then checkpoint

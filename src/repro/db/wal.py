@@ -276,8 +276,11 @@ class CheckpointStore:
             self.base = regs.copy()
             self._state = regs.copy()
             return dict(id=ckid, kind="full", n_changed=int(regs.size))
-        changed = np.argwhere(regs != self._state)
-        cells = [(int(s), int(r), int(regs[s, r])) for s, r in changed]
+        # flat (raveled) indices: rank-agnostic, so [S, R] single-switch
+        # and [N, S, R] sharded register stacks diff through the same path
+        flat, prev = regs.ravel(), self._state.ravel()
+        changed = np.flatnonzero(flat != prev)
+        cells = [(int(i), int(flat[i])) for i in changed]
         self.diffs.append(dict(id=ckid, cells=cells))
         self._state = regs.copy()
         return dict(id=ckid, kind="incremental", n_changed=len(cells))
@@ -292,9 +295,10 @@ class CheckpointStore:
         if self.base is None:
             return None
         st = self.base.copy()
+        flat = st.ravel()                 # view: writes land in st
         for d in self.diffs:
-            for s, r, v in d["cells"]:
-                st[s, r] = v
+            for i, v in d["cells"]:
+                flat[i] = v
         return st
 
 

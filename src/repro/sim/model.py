@@ -153,6 +153,9 @@ class Timing:
     t_replay_send: float = 0.5e-6     # per post-checkpoint send replayed
                                       # into the standby at takeover — the
                                       # term ckpt_interval bounds
+    t_interswitch: float = 1e-6       # per extra switch hop a cross-shard
+                                      # hot txn pays (multi-switch topology;
+                                      # only charged when n_switches > 1)
 
 
 @dataclass
@@ -211,6 +214,13 @@ class SystemConfig:
                                       # the pending re-placement demote to
                                       # the cold path (home-store reads)
                                       # instead of waiting out the pause
+    n_switches: int = 1               # sharded register plane: each switch
+                                      # has its OWN ingress pipeline
+                                      # (Resource), so aggregate hot
+                                      # admission scales with shards;
+                                      # cross-shard txns pay t_interswitch
+                                      # per extra hop.  1 = the single-
+                                      # switch model, event for event
 
 
 @dataclass
@@ -222,6 +232,7 @@ class TxnProfile:
     home: int
     participants: frozenset
     passes: int = 1
+    shards: frozenset = frozenset({0})   # switches this txn's hot ops touch
 
 
 def profile_txn(txn, hot_index, home_node) -> TxnProfile:
@@ -242,18 +253,24 @@ def profile_txn(txn, hot_index, home_node) -> TxnProfile:
             cold_ops.append((k, node, mode))
             parts.add(node)
     passes = 1
+    shards = frozenset({0})
     if hot_ops:
         hot_trace = [(k, o) for k, o in trace if hot_index.is_hot(k)]
-        seq = [hot_index.slot(k)[0] for k, _ in hot_trace]
+        slots = [hot_index.slot(k) for k, _ in hot_trace]
+        shards = frozenset(s[0] for s in slots) or shards
+        # (switch, stage) ordering keys: lexicographic order equals the
+        # global pipeline order the packet layer encodes, and single-
+        # switch pass counts are unchanged (switch id constant at 0)
+        seq = [s[:2] for s in slots]
         if trace_reorderable(hot_trace):
             seq = sorted(seq)
-        last = -1
+        last = (-1, -1)
         for s in seq:
             if s <= last:
                 passes += 1
             last = s
     return TxnProfile(txn.kind, klass, hot_ops, cold_ops, home_node,
-                      frozenset(parts), passes)
+                      frozenset(parts), passes, shards)
 
 
 class ClusterSim:
@@ -526,6 +543,30 @@ class ClusterSim:
         yield ("delay", svc)
         yield ("release", self.ingress)
 
+    def _ingress_admit_sharded(self, profs):
+        """Multi-switch admission (``n_switches > 1`` only): each shard
+        has its OWN ingress pipeline, so a burst splits across switches
+        and aggregate admission scales with the shard count.  A txn's
+        packet visits every switch its hot ops touch (cross-shard txns
+        occupy several pipelines); shards are admitted in id order —
+        deterministic, and shard-disjoint bursts queue independently."""
+        for sw in range(self.sys.n_switches):
+            cnt = sum(1 for p in profs if sw in p.shards)
+            if cnt == 0:
+                continue
+            t0 = self.sim.now
+            yield ("acquire", self.ingresses[sw])
+            self._charge("switch_ingress_wait", self.sim.now - t0)
+            svc = cnt / self.sys.switch_service_rate
+            self._charge("switch_ingress", svc)
+            yield ("delay", svc)
+            yield ("release", self.ingresses[sw])
+
+    def _interswitch_hops(self, profs):
+        """Total extra switch hops a set of txns pays: each cross-shard
+        txn traverses ``len(shards) - 1`` inter-switch links."""
+        return sum(len(p.shards) - 1 for p in profs if len(p.shards) > 1)
+
     def _switch_round(self, node: int, items):
         """Service one batch: a single switch round (one ``rtt_switch``)
         carrying every member; pipeline occupancy is per-txn ``t_pipe``
@@ -547,7 +588,17 @@ class ClusterSim:
             yield from self._nic_xfer(node, len(items))       # TX burst
         yield ("delay", T.rtt_switch / 2)
         if self.sys.switch_service_rate > 0:
-            yield from self._ingress_admit(len(items))
+            if self.sys.n_switches > 1:
+                yield from self._ingress_admit_sharded(
+                    [p for p, _ in items])
+            else:
+                yield from self._ingress_admit(len(items))
+        if self.sys.n_switches > 1:
+            hops = self._interswitch_hops([p for p, _ in items])
+            if hops:
+                hop = hops * T.t_interswitch
+                self._charge("interswitch", hop)
+                yield ("delay", hop)
         base = T.t_pipe * len(items)
         rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
         extra = sum((p.passes - 1) * rc for p, _ in items if p.passes > 1)
@@ -576,7 +627,14 @@ class ClusterSim:
             yield from self._nic_xfer(node, 1)                # TX
         yield ("delay", T.rtt_switch / 2)
         if self.sys.switch_service_rate > 0:
-            yield from self._ingress_admit(1)
+            if self.sys.n_switches > 1:
+                yield from self._ingress_admit_sharded([prof])
+            else:
+                yield from self._ingress_admit(1)
+        if self.sys.n_switches > 1 and len(prof.shards) > 1:
+            hop = (len(prof.shards) - 1) * T.t_interswitch
+            self._charge("interswitch", hop)
+            yield ("delay", hop)
         if prof.passes == 1:
             yield ("delay", T.t_pipe)
         else:
@@ -771,7 +829,11 @@ class ClusterSim:
         self.credits = [Resource(self.hot_credits)
                         for _ in range(self.n_nodes)]
         self.nics = [Resource(1) for _ in range(self.n_nodes)]
-        self.ingress = Resource(1)               # shared switch ingress
+        # one ingress pipeline per switch shard; N=1 keeps the single
+        # shared-ingress model (self.ingress aliases shard 0)
+        self.ingresses = [Resource(1)
+                          for _ in range(max(1, self.sys.n_switches))]
+        self.ingress = self.ingresses[0]         # shared switch ingress
         for node in range(self.n_nodes):
             for w in range(self.wpn):
                 g = self.worker(node)

@@ -1,7 +1,33 @@
 import os
 import sys
 
+import pytest
+
 # NB: no XLA_FLAGS here — smoke tests and benches must see the real device
 # count; only launch/dryrun.py forces 512 host devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked @pytest.mark.slow (the heavy "
+             "equivalence matrices; CI's slow-tests job runs them)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy matrix kept out of the default tier-1 run "
+        "(wall-clock budget; see README 'Tests'). Run with --runslow.")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(
+        reason="slow matrix — run with --runslow (CI slow-tests job)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

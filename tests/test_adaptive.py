@@ -146,8 +146,7 @@ def _adaptive_cluster(gen, interval, seed=0, window=1024):
 
 def _value(c, k):
     if c.use_switch and c.hot_index.is_hot(k):
-        s, r = c.hot_index.slot(k)
-        return int(np.asarray(c.switch.registers)[s, r])
+        return c.switch.read_value(c.hot_index.slot(k))
     return c.nodes[node_of(k)].store[k]
 
 
@@ -287,6 +286,7 @@ def test_diff_placements_partitions_changes():
     plan = diff_placements(old, new)
     assert [k for k, _ in plan.evict] == [1]
     assert [k for k, _ in plan.load] == [4]
-    assert [(k, o, n) for k, o, n in plan.moved] == [(3, (1, 0), (2, 0))]
+    assert [(k, o, n) for k, o, n in plan.moved] == \
+        [(3, (0, 1, 0), (0, 2, 0))]
     assert plan.stay == 1
     assert plan.n_changed == 3

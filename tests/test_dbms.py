@@ -16,8 +16,7 @@ SW = SwitchConfig(n_stages=16, regs_per_stage=512, max_instrs=16)
 
 def _value(c, k):
     if c.use_switch and c.hot_index.is_hot(k):
-        s, r = c.hot_index.slot(k)
-        return int(np.asarray(c.switch.registers)[s, r])
+        return c.switch.read_value(c.hot_index.slot(k))
     return c.nodes[k // 1_000_000_000].store[k]
 
 
@@ -124,5 +123,5 @@ def test_smallbank_constraints_hold():
         c.run(t)
     regs = np.asarray(c.switch.registers)
     slots = list(hi.placement.slot.values())
-    for s, r in slots:
+    for _, s, r in slots:
         assert regs[s, r] >= 0

@@ -142,7 +142,9 @@ def test_checkpoint_store_reconstructs_from_diffs():
 #  Legacy-WAL identity pin                                              #
 # ===================================================================== #
 
-@pytest.mark.parametrize("mode", ["auto", "serial", "staged"])
+@pytest.mark.parametrize("mode", ["auto", "serial",
+                                  pytest.param("staged",
+                                               marks=pytest.mark.slow)])
 @pytest.mark.parametrize("async_hot", [False, True])
 def test_segmented_wal_identity_with_legacy_list(mode, async_hot):
     """The segmented WAL behind the ``log()`` API is observationally
@@ -362,6 +364,25 @@ def test_failover_without_standby_raises():
         c.fail_over()
 
 
+def test_load_then_failover_recovers_new_value():
+    """Standby blind-spot regression: a post-checkpoint ``load()`` must be
+    a logged write (WAL write + switch_send/switch_result), so failover
+    replay recovers it — not the pre-load checkpoint value."""
+    sw = SwitchConfig(n_stages=4, regs_per_stage=16, max_instrs=4)
+    k = key_of(0, 0)
+    hi = build_hot_index([[(k, ADD)]], 1, sw)
+    c = Cluster(1, sw, hi, use_switch=True, standby=True)
+    c.load(k, 100)
+    c.snapshot_offload()          # checkpoint: standby sees 100
+    c.run(Txn("t", [(ADD, k, 1)], 0))
+    c.load(k, 500)                # post-checkpoint load: the blind spot
+    assert c.read(k) == 500
+    c.fail_over()
+    assert c.read(k) == 500, "standby recovered a stale pre-load value"
+    # and the home store agrees (load is a logged node write too)
+    assert c.nodes[0].store[k] == 500
+
+
 # ===================================================================== #
 #  Deterministic replay (property)                                      #
 # ===================================================================== #
@@ -446,6 +467,7 @@ def test_sim_failover_outage_shrinks_with_ckpt_interval():
             assert o["ckpts_taken"] > 0
 
 
+@pytest.mark.slow
 def test_sim_gate_mirrors_functional_controller():
     """gate_t_reconfig huge ⇒ every due migration is gated (and the run
     pays no reconfig pause); gate off ⇒ the PR 4 controller, untouched."""

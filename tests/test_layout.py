@@ -13,7 +13,7 @@ def test_coaccessed_tuples_land_in_distinct_stages():
     traces = [[(1, READ), (2, WRITE)], [(2, READ), (3, WRITE)],
               [(1, READ), (3, WRITE)]] * 5
     pl = make_layout(traces, SwitchConfig(4, 4, 4))
-    stages = {pl.slot[t][0] for t in (1, 2, 3)}
+    stages = {pl.slot[t][1] for t in (1, 2, 3)}
     assert len(stages) == 3
     assert pl.stats["single_pass_rate"] == 1.0
 
@@ -22,7 +22,7 @@ def test_direction_respected():
     # read 1 feeds write 2 (ADDP): 1 must sit in an earlier stage
     traces = [[(1, READ), (2, ADDP)]] * 10
     pl = make_layout(traces, SwitchConfig(4, 4, 4))
-    assert pl.slot[1][0] < pl.slot[2][0]
+    assert pl.slot[1][1] < pl.slot[2][1]
     assert pl.stats["single_pass_rate"] == 1.0
 
 
@@ -31,7 +31,7 @@ def test_capacity_respected():
     pl = make_layout(traces, SwitchConfig(n_stages=10, regs_per_stage=4,
                                           max_instrs=4))
     per_stage = {}
-    for t, (s, r) in pl.slot.items():
+    for t, (sw, s, r) in pl.slot.items():
         per_stage[s] = per_stage.get(s, 0) + 1
     assert all(v <= 4 for v in per_stage.values())
     # register indices unique within a stage
@@ -81,7 +81,8 @@ def test_capacity_property_fits_iff_within_register_file(n_tuples, seed):
         pl = fn(traces, sw, seed=seed)
         assert set(pl.slot) == ids
         assert len(set(pl.slot.values())) == len(pl.slot)
-        for s, r in pl.slot.values():
+        for w, s, r in pl.slot.values():
+            assert w == 0
             assert 0 <= s < sw.n_stages and 0 <= r < sw.regs_per_stage
 
 
@@ -93,3 +94,30 @@ def test_single_pass_reorderable_vs_dependent():
     assert not txn_is_single_pass([(1, READ), (2, ADDP)], pl)
     # repeated tuple always multi-pass
     assert not txn_is_single_pass([(1, READ), (1, WRITE)], pl)
+
+
+# ===================================================================== #
+#  Stale-index regression: same-size in-place re-placement must         #
+#  invalidate HotIndex's cached lookup arrays (placement version, not   #
+#  just size, keys the cache)                                           #
+# ===================================================================== #
+
+def test_same_size_replacement_serves_fresh_slots():
+    from repro.core.hotset import HotIndex
+    hi = HotIndex(Placement(slot={10: (0, 0), 20: (1, 0)}))
+    st, rg = hi.slots_np(np.array([10]))[-2:]
+    assert (int(st[0]), int(rg[0])) == (0, 0)
+    # rotate the hotspot: same top-k size, different slot, mutated in place
+    hi.placement.slot[10] = (2, 5)
+    st, rg = hi.slots_np(np.array([10]))[-2:]
+    assert (int(st[0]), int(rg[0])) == (2, 5), "stale cached slot served"
+
+
+def test_same_size_key_swap_updates_hot_mask():
+    from repro.core.hotset import HotIndex
+    hi = HotIndex(Placement(slot={10: (0, 0), 20: (1, 0)}))
+    assert hi.hot_mask_np(np.array([10, 30])).tolist() == [True, False]
+    # same-size key swap: 10 leaves the hot set, 30 takes its slot
+    del hi.placement.slot[10]
+    hi.placement.slot[30] = (0, 0)
+    assert hi.hot_mask_np(np.array([10, 30])).tolist() == [False, True]

@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# model-zoo smokes are jax_pallas seed scaffolding, not on the P4DB path;
+# the full matrix (~3 min) runs in CI's slow-tests job
+pytestmark = pytest.mark.slow
+
 from repro.common.types import ParallelConfig, ShapeConfig, TrainConfig
 from repro.configs.registry import ARCHS, get_smoke
 from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step

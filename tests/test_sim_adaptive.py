@@ -69,6 +69,7 @@ def test_static_results_have_no_dynamic_keys_and_zero_knobs_pin(allhot_a):
 
 # ------------------------------------------------- adaptive re-placement --
 
+@pytest.mark.slow
 def test_static_placement_decays_under_drift(gen, hi0):
     out = run_drift(gen, hi0, "static")
     ph = out["phase_hot_rate"]
@@ -77,6 +78,7 @@ def test_static_placement_decays_under_drift(gen, hi0):
     assert out["reconfigs"] == 0
 
 
+@pytest.mark.slow
 def test_adaptive_recovers_hot_rate_static_loses_it(gen, hi0):
     st = run_drift(gen, hi0, "static")
     ad = run_drift(gen, hi0, "adaptive")
@@ -91,6 +93,7 @@ def test_adaptive_recovers_hot_rate_static_loses_it(gen, hi0):
     assert orc["phase_hot_rate"][last] > 0.6
 
 
+@pytest.mark.slow
 def test_adaptive_sim_deterministic_and_seed_sensitive(gen, hi0):
     a = run_drift(gen, hi0, "adaptive", sim_time=0.008, seed=5)
     b = run_drift(gen, hi0, "adaptive", sim_time=0.008, seed=5)
@@ -99,6 +102,7 @@ def test_adaptive_sim_deterministic_and_seed_sensitive(gen, hi0):
     assert a != c
 
 
+@pytest.mark.slow
 def test_reconfig_pause_charged_per_migration(gen, hi0):
     out = run_drift(gen, hi0, "adaptive")
     assert out["reconfigs"] >= 1
@@ -109,6 +113,7 @@ def test_reconfig_pause_charged_per_migration(gen, hi0):
     assert charged > 0
 
 
+@pytest.mark.slow
 def test_oracle_realigns_at_phase_boundaries(gen, hi0):
     out = run_drift(gen, hi0, "oracle", sim_time=0.01)
     # phases 1 and 2 happen inside the run -> one migration each

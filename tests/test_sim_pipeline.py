@@ -102,6 +102,7 @@ def test_pipelined_small_batches_beat_per_txn(allhot_a):
     assert small_d4["throughput"] > per["throughput"]   # pipelined regime
 
 
+@pytest.mark.slow
 def test_pipelined_deterministic_across_identical_seeds(allhot_a):
     cfg = SystemConfig(kind="p4db", **PIPED)
     a = C.run_sim(allhot_a, cfg, sim_time=0.01, seed=5)

@@ -396,6 +396,8 @@ SUMMARY_HEADLINES = [
      "bounded recovery: checkpointed vs full-WAL replay (PR 6)"),
     ("BENCH_multiswitch.json", ("headline_multiswitch_speedup",),
      "sharded 4-switch plane vs capacity-capped 1 switch (PR 7)"),
+    ("BENCH_reads.json", ("headline_read_speedup",),
+     "switch-served hot reads vs store-served baseline (PR 8)"),
 ]
 
 

@@ -81,8 +81,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
-                                N_PLANES, PacketStager, SwitchConfig,
-                                result_plane, shard_rows)
+                                N_PLANES, PacketStager, ReadPacket,
+                                SwitchConfig, result_plane, shard_rows)
 
 
 def init_registers(cfg: SwitchConfig, values: Optional[np.ndarray] = None):
@@ -275,6 +275,63 @@ def _bucket(b: int) -> int:
     return 1 if b <= 1 else 1 << (b - 1).bit_length()
 
 
+def _read_gather_impl(registers, idx):
+    """The READ-only fast path's whole device program: one gather out of
+    the resident register file.  No RMW, no result plane, no donation —
+    the registers buffer stays valid for the next write dispatch."""
+    return jnp.take(registers.reshape(-1), idx, mode="clip")
+
+
+def _compiled_reader(S: int, R: int, Mp: int, dev=None):
+    key = ("read", S, R, Mp, dev)
+    fn = _DISPATCH_CACHE.get(key)
+    if fn is None:
+        if dev is None:
+            spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+        else:
+            sharding = jax.sharding.SingleDeviceSharding(dev)
+            spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32,
+                                                      sharding=sharding)
+        fn = jax.jit(_read_gather_impl).lower(
+            spec((S, R)), spec((Mp,))).compile()
+        _DISPATCH_CACHE[key] = fn
+    return fn
+
+
+class PendingRead:
+    """Opaque handle to one dispatched READ-only batch — the read tier's
+    ``PendingBatch`` sibling.  Carries only the gathered values (device-
+    resident until ``values_np()``); there is no ok plane, no GID and no
+    WAL footprint: reads are non-durable by construction."""
+
+    __slots__ = ("vals", "n", "_fut", "_np")
+
+    def __init__(self, vals, n, fut=None):
+        self.vals, self.n = vals, n
+        self._fut = fut
+        self._np = None
+
+    def _resolve(self):
+        if self._fut is not None:
+            self.vals = self._fut.result()
+            self._fut = None
+
+    def values_np(self) -> np.ndarray:
+        """Materialize the [n] value vector on host (cached)."""
+        if self._np is None:
+            self._resolve()
+            self._np = np.asarray(self.vals)[:self.n]
+        return self._np
+
+    def block(self):
+        self._resolve()
+        jax.block_until_ready(self.vals)
+        return self
+
+    def ready(self) -> bool:
+        return self._np is not None
+
+
 class PendingBatch:
     """Opaque handle to one dispatched batch — the async hot path's unit
     of in-flight work.
@@ -361,6 +418,7 @@ class SwitchEngine:
         self.registers = self._put(init_registers(cfg, registers))
         self.next_gid = 0
         self.dispatch_count = 0
+        self.read_dispatch_count = 0    # READ-only gathers (no GID, no WAL)
         # reusable host staging buffers (one fused H2D per dispatch); the
         # pool must stay deeper than the caller's async in-flight window
         self._stager = PacketStager(pool=stager_pool)
@@ -534,6 +592,78 @@ class SwitchEngine:
         _, res, ok, compact = out
         return PendingBatch(res, ok, compact, gids, B, K, base, idx, mode)
 
+    def execute_reads(self, rp: ReadPacket, mode: str = "auto",
+                      defer: bool = False) -> PendingRead:
+        """The switch-served read path: answer a READ-only packet batch
+        straight from the resident device registers, skipping everything
+        the write path needs — no GID, no WAL entry, no pipeline lock, no
+        recirculation, no result plane.  One AOT-cached gather per call
+        (power-of-two index bucket), values returned in key order.
+
+        Async-compatible: on an ``async_dispatch`` engine the gather runs
+        on the same single-worker FIFO dispatch thread as every write
+        dispatch, so a read submitted after a deferred write group
+        observes that group's register effects WITHOUT the caller having
+        to drain its ``PendingBatch`` result planes.  ``defer=True``
+        returns immediately with a future-backed handle; otherwise the
+        call blocks until the values exist (FIFO ⇒ all earlier writes
+        committed first either way)."""
+        M = rp.n
+        if M == 0:
+            return PendingRead(np.zeros(0, np.int32), 0)
+        Mp = _bucket(M)
+        idx = np.zeros(Mp, np.int32)
+        idx[:M] = rp.flat_idx(self.cfg)
+        S, R = self.cfg.n_stages, self.cfg.regs_per_stage
+        if mode == "pallas":
+            def job():
+                from repro.kernels.switch_txn import ops as ktx
+                return ktx.gather_results(self.registers,
+                                          self._put(jnp.array(idx)))
+        else:
+            fn = _compiled_reader(S, R, Mp, self._device)
+
+            def job():
+                # reads self.registers AT EXECUTION time on the dispatch
+                # thread — FIFO chaining puts it after every earlier write
+                return fn(self.registers, self._put(jnp.array(idx)))
+
+        self.read_dispatch_count += 1
+        out, fut = self._submit(job, defer)
+        if fut is not None:
+            return PendingRead(None, M, fut=fut)
+        return PendingRead(out, M)
+
+    def execute_scan(self, rp: ReadPacket, lo: int, hi: int,
+                     cap: Optional[int] = None, k: Optional[int] = None):
+        """Switch-side pruned scan over a READ-only slot set: gather the
+        slots, filter by ``lo <= v <= hi`` on device, ship only the
+        surviving rows (the kernels/switch_txn scan-prune path).
+
+        Exactly one of ``cap``/``k``: ``cap`` returns the first ``cap``
+        survivors in slot order plus (count, sum, min, max) aggregates;
+        ``k`` returns the k largest in-range values (ties toward the
+        lower slot position) plus the match count.  Returns host arrays
+        ``(vals, pos, agg_or_count)`` where ``pos`` indexes into ``rp``'s
+        key order; like ``execute_reads`` the device call runs on the
+        FIFO dispatch thread, so it observes every earlier write without
+        a result-plane drain."""
+        from repro.kernels.switch_txn import ops as ktx
+        if (cap is None) == (k is None):
+            raise ValueError("exactly one of cap/k")
+        idx = self._put(jnp.asarray(rp.flat_idx(self.cfg)))
+
+        def job():
+            if k is not None:
+                return ktx.scan_topk(self.registers, idx, lo, hi, k=k)
+            return ktx.scan_prune(self.registers, idx, lo, hi, cap=cap)
+
+        self.read_dispatch_count += 1
+        out, _ = self._submit(job, defer=False)
+        vals, pos, tail = out
+        return (np.asarray(vals), np.asarray(pos),
+                np.asarray(tail) if k is None else int(tail))
+
     def read_all(self) -> np.ndarray:
         self._join()
         return np.asarray(self.registers)
@@ -616,6 +746,10 @@ class ShardedSwitchEngine:
     @property
     def dispatch_count(self) -> int:
         return sum(p.dispatch_count for p in self.planes)
+
+    @property
+    def read_dispatch_count(self) -> int:
+        return sum(p.read_dispatch_count for p in self.planes)
 
     @property
     def registers(self):
@@ -741,6 +875,98 @@ class ShardedSwitchEngine:
             ok[k] = bool(pb.ok_np()[0, 0])
         return res, ok
 
+    def execute_reads(self, rp: ReadPacket, mode: str = "auto",
+                      defer: bool = False):
+        """Sharded read path: split the READ-only batch by shard, gather
+        each shard's values concurrently on its own plane (its own device
+        + dispatch thread), scatter back to key order on drain.  Reads
+        touch disjoint registers per shard and modify nothing, so no
+        cross-shard barrier exists — unlike writes, a 'cross-shard read'
+        cannot happen (each key lives on exactly one shard)."""
+        if self.n == 1:
+            return self.planes[0].execute_reads(rp, mode=mode, defer=defer)
+        M = rp.n
+        if M == 0:
+            return PendingRead(np.zeros(0, np.int32), 0)
+        parts = []
+        for sw in range(self.n):
+            pos = np.flatnonzero(rp.switch == sw)
+            if not len(pos):
+                continue
+            sub = ReadPacket(switch=np.zeros(len(pos), np.int32),
+                             stage=rp.stage[pos], reg=rp.reg[pos])
+            # defer per shard even on a sync call: the shards gather in
+            # parallel; _MergedRead's materialization joins them in order
+            pr = self.planes[sw].execute_reads(
+                sub, mode=mode, defer=self.async_dispatch)
+            parts.append((pos, pr))
+        handle = _MergedRead(M, parts)
+        if not defer and self.async_dispatch:
+            handle.block()
+        return handle
+
+    def execute_scan(self, rp: ReadPacket, lo: int, hi: int,
+                     cap: Optional[int] = None, k: Optional[int] = None):
+        """Sharded pruned scan: each shard filters its own slots on its
+        own device, ships ≤ cap (or k) survivors, and the host merges by
+        global key position — the per-shard prefix property makes the
+        merge exact (the global first-``cap`` survivors are a union of
+        per-shard survivor prefixes, so no shard can hide one)."""
+        if self.n == 1:
+            return self.planes[0].execute_scan(rp, lo, hi, cap=cap, k=k)
+        if (cap is None) == (k is None):
+            raise ValueError("exactly one of cap/k")
+        cand_pos, cand_vals, aggs, total = [], [], [], 0
+        for sw in range(self.n):
+            pos = np.flatnonzero(rp.switch == sw)
+            if not len(pos):
+                continue
+            sub = ReadPacket(switch=np.zeros(len(pos), np.int32),
+                             stage=rp.stage[pos], reg=rp.reg[pos])
+            cc = None if cap is None else min(cap, len(pos))
+            kk = None if k is None else min(k, len(pos))
+            vals, p, tail = self.planes[sw].execute_scan(
+                sub, lo, hi, cap=cc, k=kk)
+            if cap is not None:
+                t = min(int(tail[0]), cc)
+                cand_pos.append(pos[p[:t]])
+                cand_vals.append(vals[:t])
+                aggs.append(tail)
+            else:
+                cand_pos.append(pos[p])
+                cand_vals.append(vals)
+                total += tail
+        if cap is not None:
+            gp = np.concatenate(cand_pos) if cand_pos else np.zeros(0, np.int32)
+            gv = np.concatenate(cand_vals) if cand_vals else np.zeros(0, np.int32)
+            order = np.argsort(gp, kind="stable")[:cap]
+            vals = np.zeros(cap, np.int32)
+            posg = np.full(cap, -1, np.int32)
+            vals[:len(order)] = gv[order]
+            posg[:len(order)] = gp[order]
+            if aggs:
+                a = np.stack(aggs)
+                agg = np.array([a[:, 0].sum(dtype=np.int32),
+                                a[:, 1].sum(dtype=np.int32),
+                                a[:, 2].min(), a[:, 3].max()], np.int32)
+            else:
+                from repro.kernels.switch_txn.switch_txn import (
+                    AGG_MAX_EMPTY, AGG_MIN_EMPTY)
+                agg = np.array([0, 0, AGG_MIN_EMPTY, AGG_MAX_EMPTY],
+                               np.int32)
+            return vals, posg, agg
+        from repro.kernels.switch_txn.switch_txn import AGG_MAX_EMPTY
+        gp = np.concatenate(cand_pos) if cand_pos else np.zeros(0, np.int32)
+        gv = np.concatenate(cand_vals) if cand_vals else np.zeros(0, np.int32)
+        # global top-k by (-value, global key position): the same tie rule
+        # lax.top_k applies inside one plane
+        order = np.lexsort((gp, -gv.astype(np.int64)))[:k]
+        vals = np.full(k, AGG_MAX_EMPTY, np.int32)
+        posg = np.zeros(k, np.int32)
+        vals[:len(order)] = gv[order]
+        posg[:len(order)] = gp[order]
+        return vals, posg, int(total)
+
     # ------------------------------------------------------ state access --
     def read_all(self) -> np.ndarray:
         """[S, R] with one shard, [N, S, R] stacked otherwise."""
@@ -780,6 +1006,34 @@ class ShardedSwitchEngine:
         sw, s, r = (0, *slot) if len(slot) == 2 else slot
         plane = self.planes[sw]
         return int(plane.read_all()[s, r])
+
+
+class _MergedRead:
+    """PendingRead-compatible handle over a sharded read gather: per-shard
+    value vectors scatter back into the caller's key order on drain."""
+
+    __slots__ = ("n", "_parts", "_np")
+
+    def __init__(self, n, parts):
+        self.n = n
+        self._parts = parts        # (positions [m], PendingRead)
+        self._np = None
+
+    def values_np(self) -> np.ndarray:
+        if self._np is None:
+            out = np.zeros(self.n, np.int32)
+            for pos, pr in self._parts:
+                out[pos] = pr.values_np()
+            self._np = out
+        return self._np
+
+    def block(self):
+        for _, pr in self._parts:
+            pr.block()
+        return self
+
+    def ready(self) -> bool:
+        return self._np is not None
 
 
 class _MergedBatch:

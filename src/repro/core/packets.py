@@ -293,6 +293,50 @@ class PacketStager:
         return buf
 
 
+# --------------------------------------------------------- read packets --
+
+@dataclass(frozen=True)
+class ReadPacket:
+    """READ-only packet batch — the in-network read tier's wire format.
+
+    A read packet carries bare (switch, stage, reg) slots, no opcodes and
+    no header: reads never modify registers, so stage-access order is
+    irrelevant (no multipass / recirculation) and the pipeline lock is
+    never taken — ``is_multipass`` and ``locks`` simply do not exist on
+    this class, by construction.  The engine serves the whole batch as
+    one device gather (``SwitchEngine.execute_reads``); values come back
+    in key (build) order.
+
+    ``switch``/``stage``/``reg`` are flat int32 [n] arrays (one entry per
+    requested key, NOT the [B, K] instruction plane — a read has no
+    result-ordering metadata to carry)."""
+    switch: np.ndarray
+    stage: np.ndarray
+    reg: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.switch.shape[0])
+
+    def flat_idx(self, cfg: SwitchConfig) -> np.ndarray:
+        """Per-switch flat register index ``stage * R + reg`` [n]."""
+        return (self.stage.astype(np.int64) * cfg.regs_per_stage
+                + self.reg).astype(np.int32)
+
+
+def build_read_packets(keys, hot_index, cfg: SwitchConfig) -> ReadPacket:
+    """Assemble one READ-only packet batch for a hot-key vector.
+
+    Slot resolution goes through ``HotIndex.slots_np`` — the placement-
+    versioned vectorized lookup the write path uses — so an in-place
+    re-placement can never serve a read from a stale slot.  Raises
+    KeyError if any key is not hot (callers route cold keys to their
+    home-node stores)."""
+    keys = np.asarray(keys, np.int64)
+    switch, stage, reg = hot_index.slots_np(keys)
+    return ReadPacket(switch=switch, stage=stage, reg=reg)
+
+
 def shard_rows(p: Dict[str, np.ndarray], cfg: SwitchConfig) -> np.ndarray:
     """Per-row switch id [B] decoded from the global-stage encoding
     (``stage // n_stages``); -1 marks a cross-shard row.  Fallback for

@@ -46,7 +46,7 @@ from repro.core.engine import ShardedSwitchEngine, SwitchEngine, \
 from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
                                 SwitchConfig, addp_unsafe_rows,
-                                build_packets)
+                                build_packets, build_read_packets)
 from repro.db.faults import FaultPlan, SimulatedCrash, SwitchUnavailable
 from repro.db.txn import Txn, node_of
 from repro.db.wal import (DEFAULT_SEGMENT_SIZE, CheckpointStore,
@@ -737,8 +737,118 @@ class Cluster:
                 raise SwitchUnavailable(
                     f"hot key {key} lives on the crashed switch")
             self.drain()
-            return self.switch.read_value(self.hot_index.slot(key))
+            # resolve through the placement-VERSIONED vectorized lookup
+            # (slots_np), same as the write path's packet builder — the raw
+            # dict walk could serve a slot cached before an in-place
+            # re-placement (the stale-slot class pinned in test_layout.py)
+            sw, st, rg = self.hot_index.slots_np(np.asarray([key], np.int64))
+            return self.switch.read_value((int(sw[0]), int(st[0]),
+                                           int(rg[0])))
         return self.nodes[node_of(key)].store[key]
+
+    def read_batch(self, keys) -> List[int]:
+        """The switch-served read tier (paper §4.3: READ-only hot txns are
+        answered by the data plane): one vectorized hot/cold split, hot
+        keys gathered straight from the resident device registers in a
+        single dispatch — no WAL entry, no GID, no locks, no pipeline
+        recirculation (reads are non-durable by construction) — cold keys
+        from their authoritative home-node stores.
+
+        Coherent without draining: on an async cluster the gather is
+        submitted to the same FIFO dispatch thread as every in-flight
+        write group, so it observes all of them while their result planes
+        stay lazily device-resident.  While the switch is down, keys
+        evicted by the interrupted migration fall back to their home
+        stores; any other hot key raises ``SwitchUnavailable``."""
+        keys = np.asarray(list(keys), np.int64)
+        out = np.zeros(len(keys), np.int64)
+        hot = self.hot_index.hot_mask_np(keys) if self.use_switch \
+            else np.zeros(len(keys), bool)
+        if self._switch_down and hot.any():
+            bad = [int(k) for k in keys[hot]
+                   if k not in self._mid_migration_evicted]
+            if bad:
+                raise SwitchUnavailable(
+                    f"hot keys {bad[:4]} live on the crashed switch")
+            hot[:] = False              # evicted: home stores are
+        hot_pos = np.flatnonzero(hot)   # authoritative (partial avail.)
+        if len(hot_pos):
+            rp = build_read_packets(keys[hot_pos], self.hot_index,
+                                    self.switch_cfg)
+            pr = self.switch.execute_reads(rp, mode=self._read_mode())
+            out[hot_pos] = pr.values_np()
+            self.stats["switch_reads"] += len(hot_pos)
+        for i in np.flatnonzero(~hot):
+            out[i] = self.nodes[node_of(int(keys[i]))].store[int(keys[i])]
+            self.stats["store_reads"] += 1
+        return [int(v) for v in out]
+
+    def _read_mode(self) -> str:
+        # READ gathers have no CADD/multipass constraints: any engine mode
+        # can serve them.  "pallas" keeps the faithful-execution kernels
+        # in the loop; every other mode uses the AOT-cached jit gather.
+        return "pallas" if self.switch_mode == "pallas" else "auto"
+
+    def scan(self, lo: int, hi: int, keys=None, limit: Optional[int] = None):
+        """Range-predicate scan with switch-side pruning: filter value in
+        ``[lo, hi]`` over the hot tier (``keys=None`` scans the whole
+        switch-resident working set; an explicit key list may mix hot and
+        cold).  Hot keys are filtered ON DEVICE by the scan-prune kernel —
+        only surviving rows (≤ cap, power-of-two padded) ship to the host,
+        never the full register file; cold keys filter host-side at their
+        home stores.  ``limit`` keeps the ``limit`` largest matches (ties
+        toward the smaller key, the device top-k rule).  Returns
+        ``[(key, value)]`` sorted by key.  Same availability contract as
+        ``read_batch``."""
+        if keys is None:
+            keys = sorted(self.hot_index.placement.slot.keys()) \
+                if self.use_switch else []
+        keys = np.asarray(list(keys), np.int64)
+        hot = self.hot_index.hot_mask_np(keys) if self.use_switch \
+            else np.zeros(len(keys), bool)
+        if self._switch_down and hot.any():
+            bad = [int(k) for k in keys[hot]
+                   if k not in self._mid_migration_evicted]
+            if bad:
+                raise SwitchUnavailable(
+                    f"hot keys {bad[:4]} live on the crashed switch")
+            hot[:] = False
+        # hot side: keys sorted ascending so device stream position order
+        # == key order (makes the top-k tie rule "smaller key wins")
+        hk = np.sort(keys[hot])
+        matches: List[Tuple[int, int]] = []
+        if len(hk):
+            rp = build_read_packets(hk, self.hot_index, self.switch_cfg)
+            M = len(hk)
+            if limit is not None:
+                k = min(limit, M)
+                vals, pos, count = self.switch.execute_scan(
+                    rp, lo, hi, k=k)
+                t = min(count, k)
+                self.stats["scan_rows_shipped"] += k
+            else:
+                cap = min(M, max(16, (limit or 0)))
+                vals, pos, agg = self.switch.execute_scan(
+                    rp, lo, hi, cap=cap)
+                self.stats["scan_rows_shipped"] += cap
+                if int(agg[0]) > cap:       # truncated: rescan at the
+                    cap = min(int(agg[0]), M)   # exact survivor count
+                    vals, pos, agg = self.switch.execute_scan(
+                        rp, lo, hi, cap=cap)
+                    self.stats["scan_rows_shipped"] += cap
+                t = min(int(agg[0]), cap)
+            matches += [(int(hk[pos[i]]), int(vals[i])) for i in range(t)]
+            self.stats["scans_switch"] += 1
+        for k_ in keys[~hot]:
+            v = self.nodes[node_of(int(k_))].store[int(k_)]
+            if lo <= v <= hi:
+                matches.append((int(k_), v))
+        if limit is not None and len(matches) > limit:
+            # global top-``limit`` by (-value, key): identical rule to the
+            # device top-k, applied across the hot/cold merge
+            matches.sort(key=lambda kv: (-kv[1], kv[0]))
+            matches = matches[:limit]
+        return sorted(matches)
 
     # -------------------------------------------------------- recovery --
     def _post_ckpt_sends(self):

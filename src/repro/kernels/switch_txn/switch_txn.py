@@ -98,6 +98,107 @@ def result_gather_call(src, idx, *, chunk=1024, interpret=True):
     return out[:m]
 
 
+AGG_MIN_EMPTY = 2147483647        # int32 identities the aggregate lanes
+AGG_MAX_EMPTY = -2147483648       # start from (empty-scan sentinels)
+
+
+def _scan_prune_kernel(lo_ref, hi_ref, src_ref, vals_ref, idx_ref, agg_ref,
+                       vals_s, idx_s, agg_s, cur_s, *, chunk, n, n_chunks,
+                       cap):
+    """Predicate scan + on-device compaction over a value stream.
+
+    Walks the stream in order (sequential grid, like the RMW kernel);
+    every in-range element bumps the aggregate lanes (count/sum/min/max)
+    and — while the output buffer has room — is appended to the compacted
+    (value, position) scratch.  Branchless: a rejected or overflow element
+    writes to the sacrificial slot ``cap``.  Only the ``cap``-row scratch
+    (not the full stream) leaves the device, which is the whole point:
+    scan/filter queries ship ≤ cap rows to the host no matter how large
+    the scanned register file is."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        cur_s[0] = 0
+        agg_s[0] = 0                      # count (ALL matches, beyond cap)
+        agg_s[1] = 0                      # sum
+        agg_s[2] = AGG_MIN_EMPTY          # min
+        agg_s[3] = AGG_MAX_EMPTY          # max
+        vals_s[...] = jnp.zeros((cap + 1,), jnp.int32)
+        idx_s[...] = jnp.full((cap + 1,), -1, jnp.int32)
+
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+
+    def body(i, _):
+        pos = step * chunk + i
+        v = src_ref[i]
+        m = (v >= lo) & (v <= hi) & (pos < n)
+        c = cur_s[0]
+        take = m & (c < cap)
+        w = jnp.where(take, c, cap)       # slot cap is sacrificial
+        vals_s[w] = jnp.where(take, v, vals_s[w])
+        idx_s[w] = jnp.where(take, pos, idx_s[w])
+        cur_s[0] = c + take.astype(jnp.int32)
+        agg_s[0] = agg_s[0] + m.astype(jnp.int32)
+        agg_s[1] = agg_s[1] + jnp.where(m, v, 0)
+        agg_s[2] = jnp.minimum(agg_s[2], jnp.where(m, v, AGG_MIN_EMPTY))
+        agg_s[3] = jnp.maximum(agg_s[3], jnp.where(m, v, AGG_MAX_EMPTY))
+        return ()
+
+    jax.lax.fori_loop(0, chunk, body, ())
+
+    @pl.when(step == n_chunks - 1)
+    def _fin():
+        vals_ref[...] = vals_s[:cap]
+        idx_ref[...] = idx_s[:cap]
+        agg_ref[...] = agg_s[...]
+
+
+def scan_prune_call(src, lo, hi, *, cap, chunk=1024, interpret=True):
+    """Switch-side scan pruning: filter ``src`` by the inclusive range
+    predicate ``lo <= v <= hi`` and return only the first ``cap``
+    surviving rows (in stream order) plus whole-stream aggregates.
+
+    src: [N] int32 value stream; lo/hi: int32 scalars (traced OK);
+    cap: static output capacity.  Returns
+      vals [cap] int32 — surviving values (0-padded past the count),
+      idx  [cap] int32 — their stream positions (-1-padded),
+      agg  [4]   int32 — (count, sum, min, max) over ALL matches,
+                         min/max = int32 identities when count == 0;
+                         ``count > cap`` tells the caller the output
+                         was truncated (rescan with a bigger cap).
+    """
+    n = src.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        src = jnp.concatenate([src, jnp.zeros((pad,), jnp.int32)])
+    n_chunks = (n + pad) // chunk
+    kernel = functools.partial(_scan_prune_kernel, chunk=chunk, n=n,
+                               n_chunks=n_chunks, cap=cap)
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    stream_spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    cap_spec = pl.BlockSpec((cap,), lambda i: (0,))
+    agg_spec = pl.BlockSpec((4,), lambda i: (0,))
+    vals, idx, agg = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[scalar_spec, scalar_spec, stream_spec],
+        out_specs=[cap_spec, cap_spec, agg_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap,), jnp.int32),
+            jax.ShapeDtypeStruct((cap,), jnp.int32),
+            jax.ShapeDtypeStruct((4,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((cap + 1,), jnp.int32),
+                        pltpu.VMEM((cap + 1,), jnp.int32),
+                        pltpu.VMEM((4,), jnp.int32),
+                        pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray([lo], jnp.int32), jnp.asarray([hi], jnp.int32), src)
+    return vals, idx, agg
+
+
 def switch_txn_call(registers_flat, op, g, val, *, chunk=1024,
                     interpret=True):
     """registers_flat: [n_slots] int32; op/g/val: [N] int32, any N >= 1.

@@ -134,6 +134,12 @@ class Timing:
     rtt_node: float = 8e-6            # node -> node round trip (2 hops each way)
     rtt_switch: float = 4e-6          # node -> switch round trip (1 hop each way)
     t_pipe: float = 0.1e-6            # pipeline transit
+    t_read_pipe: float = 0.05e-6      # pipeline transit of a READ-only hot
+                                      # packet (read_path=True): no register
+                                      # writes, no lock bits, no WAL mirror
+                                      # work at the node — it shares ingress
+                                      # and the NIC with writes but never
+                                      # recirculates or takes the pipe lock
     t_recirc: float = 0.6e-6          # per extra pass (recirculation port)
     t_recirc_fast: float = 0.25e-6    # fast-recirculate port (lock owners)
     t_backoff: float = 10e-6          # abort backoff base (grows per retry)
@@ -214,6 +220,14 @@ class SystemConfig:
                                       # the pending re-placement demote to
                                       # the cold path (home-store reads)
                                       # instead of waiting out the pause
+    read_path: bool = False           # switch-served read tier: READ-only
+                                      # hot txns transit at t_read_pipe,
+                                      # never take the pipeline lock, never
+                                      # recirculate, and don't count as
+                                      # checkpointable sends (non-durable by
+                                      # construction).  False = every hot
+                                      # txn priced as a write, zero new
+                                      # events (the pre-read-tier model)
     n_switches: int = 1               # sharded register plane: each switch
                                       # has its OWN ingress pipeline
                                       # (Resource), so aggregate hot
@@ -562,6 +576,13 @@ class ClusterSim:
             yield ("delay", svc)
             yield ("release", self.ingresses[sw])
 
+    def _read_only(self, prof: TxnProfile) -> bool:
+        """True when ``read_path`` serves this profile from the data plane
+        as a pure read: every hot op is mode "S".  Off ⇒ always False, so
+        every charge below is byte-identical to the pre-read-tier model."""
+        return (self.sys.read_path and bool(prof.hot_ops)
+                and all(m == "S" for _, _, m in prof.hot_ops))
+
     def _interswitch_hops(self, profs):
         """Total extra switch hops a set of txns pays: each cross-shard
         txn traverses ``len(shards) - 1`` inter-switch links."""
@@ -599,9 +620,15 @@ class ClusterSim:
                 hop = hops * T.t_interswitch
                 self._charge("interswitch", hop)
                 yield ("delay", hop)
-        base = T.t_pipe * len(items)
+        n_read = sum(1 for p, _ in items if self._read_only(p))
+        if n_read:
+            self._charge("read_pipe", T.t_read_pipe * n_read)
+        base = T.t_pipe * (len(items) - n_read) + T.t_read_pipe * n_read
         rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
-        extra = sum((p.passes - 1) * rc for p, _ in items if p.passes > 1)
+        # read members never recirculate: a READ-only hot txn transits in
+        # one pass regardless of its slot sequence (nothing to lock)
+        extra = sum((p.passes - 1) * rc for p, _ in items
+                    if p.passes > 1 and not self._read_only(p))
         if extra:
             t0 = self.sim.now
             yield ("acquire", self.pipe)
@@ -616,7 +643,7 @@ class ClusterSim:
             yield from self._nic_xfer(node, len(items))       # RX burst
         self.rounds += 1
         self.round_txns += len(items)
-        self._sends_since_ckpt += len(items)
+        self._sends_since_ckpt += len(items) - n_read
 
     def switch_txn(self, prof: TxnProfile, node: Optional[int] = None):
         T = self.T
@@ -635,6 +662,15 @@ class ClusterSim:
             hop = (len(prof.shards) - 1) * T.t_interswitch
             self._charge("interswitch", hop)
             yield ("delay", hop)
+        if self._read_only(prof):
+            # the read tier: single transit at the read-path rate, no
+            # pipeline lock, no recirculation, no checkpointable send
+            self._charge("read_pipe", T.t_read_pipe)
+            yield ("delay", T.t_read_pipe)
+            yield ("delay", T.rtt_switch / 2)
+            if self.sys.nic_line_rate > 0:
+                yield from self._nic_xfer(node, 1)            # RX
+            return
         if prof.passes == 1:
             yield ("delay", T.t_pipe)
         else:

@@ -9,7 +9,6 @@ Key layout per warehouse w (0-based, round-robin over nodes):
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass
 
 import numpy as np
@@ -59,9 +58,6 @@ def order_row(p, w, uniq):
     return key_of(_node(p, w), 60_000_000 + uniq)
 
 
-_uniq = itertools.count()
-
-
 def hot_keys(p: TPCCParams):
     ks = []
     for w in range(p.n_warehouses):
@@ -98,9 +94,15 @@ def generate(rng: np.random.Generator, n: int, p: TPCCParams):
             # duplicate order lines for one item merge into one decrement
             # (keeps hot txns reorderable -> single-pass, paper §4.1)
             ops += [(ADD, k, v) for k, v in qty.items()]
-            # cold inserts: order header + one order-line row per item
+            # cold inserts: order header + one order-line row per item.
+            # Order-row ids come from the rng, NOT a module counter: the
+            # stream must be a pure function of the seed (same fix as
+            # drift.TPCCWarehouseRotation; a global itertools.count made
+            # two same-seed generate() calls diverge — caught by the
+            # conftest seed-determinism guard)
             for _ in range(1 + p.items_per_order):
-                ops.append((WRITE, order_row(p, w, next(_uniq) % 8_000_000),
+                ops.append((WRITE, order_row(p, w,
+                                             int(rng.integers(8_000_000))),
                             int(rng.integers(1, 1000))))
             txns.append(Txn("neworder", ops, home))
         else:

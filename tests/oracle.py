@@ -1,0 +1,78 @@
+"""Plain-dict reference database for the differential read/write harness
+(tests/test_reads.py): every value lives in one Python dict, every op
+executes serially in admission order with the switch's register semantics
+(engine/ref.py restated over a dict instead of a register file).  No
+placement, no packets, no devices — if the cluster and this thing ever
+disagree on a committed value, a read, or a scan, the cluster is wrong.
+
+Scan/limit merge rule (must mirror ``Cluster.scan``): matches are value
+in ``[lo, hi]``; ``limit`` keeps the ``limit`` largest by value with ties
+toward the smaller key (the device top-k rule); output sorted by key.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.core.packets import ADD, ADDP, CADD, NOP, READ, WRITE
+
+
+class OracleDB:
+    """Serial single-store reference: ``apply`` returns the same per-op
+    result list a hot switch dispatch produces (READ -> current value,
+    writes -> post-value, failed CADD -> unchanged value, NOP -> 0)."""
+
+    def __init__(self):
+        self.values = collections.defaultdict(int)
+
+    def load(self, key: int, value: int):
+        self.values[key] = value
+
+    # ------------------------------------------------------------ writes --
+    def apply(self, ops):
+        """Execute one transaction's [(op, key, val)] serially; ADDP's
+        operand indexes an earlier op of the SAME txn (its materialized
+        result becomes the addend), exactly the engine's forwarding rule."""
+        res = []
+        for o, k, v in ops:
+            cur = self.values[k]
+            if o == ADDP:
+                o, v = ADD, res[min(max(v, 0), len(ops) - 1)]
+            post = cur + v
+            if o == WRITE:
+                self.values[k] = v
+                res.append(v)
+            elif o == ADD:
+                self.values[k] = post
+                res.append(post)
+            elif o == CADD:
+                if post >= 0:
+                    self.values[k] = post
+                    res.append(post)
+                else:
+                    res.append(cur)
+            elif o == READ:
+                res.append(cur)
+            else:                                        # NOP
+                res.append(0)
+        return res
+
+    def apply_txn(self, txn):
+        return self.apply(list(txn.ops))
+
+    # ------------------------------------------------------------- reads --
+    def read(self, key: int) -> int:
+        return self.values[key]
+
+    def read_batch(self, keys):
+        return [self.values[int(k)] for k in keys]
+
+    def scan(self, lo: int, hi: int, keys, limit=None):
+        """[(key, value)] sorted by key; ``limit`` = top-``limit`` by
+        (-value, key) before the final key sort — the identical rule
+        ``Cluster.scan`` applies across its hot/cold merge."""
+        matches = [(int(k), self.values[int(k)]) for k in keys
+                   if lo <= self.values[int(k)] <= hi]
+        if limit is not None and len(matches) > limit:
+            matches.sort(key=lambda kv: (-kv[1], kv[0]))
+            matches = matches[:limit]
+        return sorted(matches)

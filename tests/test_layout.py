@@ -113,6 +113,37 @@ def test_same_size_replacement_serves_fresh_slots():
     assert (int(st[0]), int(rg[0])) == (2, 5), "stale cached slot served"
 
 
+def test_read_path_serves_fresh_slots_after_inplace_replacement():
+    """Cluster-level twin of the pin above (ISSUE 8 satellite): after a
+    same-size in-place re-placement, ``Cluster.read()`` and
+    ``read_batch`` must resolve through the SAME placement-versioned
+    lookup (``slots_np``) the write path's packet builder uses — a read
+    served off a differently-cached slot would return the value at the
+    key's pre-migration register while writes land at the new one."""
+    from repro.core.hotset import HotIndex
+    from repro.db.dbms import Cluster
+    from repro.db.txn import Txn, node_of
+
+    sw = SwitchConfig(n_stages=4, regs_per_stage=8, max_instrs=4)
+    hi = HotIndex(Placement(slot={10: (0, 0, 0), 20: (0, 1, 0)}))
+    c = Cluster(2, sw, hi)
+    c.load(10, 111)
+    c.snapshot_offload()
+    # prime both cached lookups (read AND write path) at the old slot
+    assert c.read(10) == 111
+    assert c.read_batch([10]) == [111]
+    # rotate the hotspot in place: same top-k size, different slot
+    hi.placement.slot[10] = (0, 2, 5)
+    # the write lands at the NEW slot (slots_np re-syncs on version)...
+    c.run_batch([Txn("t", [(WRITE, 10, 222)], node_of(10))])
+    # ...and every read-path flavor must see it — not the stale register
+    assert c.read(10) == 222, "read() served a stale cached slot"
+    assert c.read_batch([10]) == [222], "read_batch served a stale slot"
+    assert c.scan(222, 222) == [(10, 222)]
+    regs = np.asarray(c.switch.read_all())
+    assert int(regs[2, 5]) == 222
+
+
 def test_same_size_key_swap_updates_hot_mask():
     from repro.core.hotset import HotIndex
     hi = HotIndex(Placement(slot={10: (0, 0), 20: (1, 0)}))

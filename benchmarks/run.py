@@ -398,6 +398,8 @@ SUMMARY_HEADLINES = [
      "sharded 4-switch plane vs capacity-capped 1 switch (PR 7)"),
     ("BENCH_reads.json", ("headline_read_speedup",),
      "switch-served hot reads vs store-served baseline (PR 8)"),
+    ("BENCH_serve.json", ("headline_serve_knee_ratio",),
+     "open-loop saturation knee: p4db vs noswitch serving (PR 9)"),
 ]
 
 

@@ -35,7 +35,9 @@ benchmarks; contention timing lives in repro.sim.  Pieces:
 from __future__ import annotations
 
 import collections
+import contextlib
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -51,8 +53,19 @@ from repro.db.faults import FaultPlan, SimulatedCrash, SwitchUnavailable
 from repro.db.txn import Txn, node_of
 from repro.db.wal import (DEFAULT_SEGMENT_SIZE, CheckpointStore,
                           SegmentedWAL)
+from repro.obs.names import (G_INFLIGHT, G_SHARD_DISPATCHES, G_WAL_RECORDS,
+                             H_BATCH_SERVICE, H_DRAIN, H_READ_BATCH,
+                             H_TXN_LATENCY, stat_metric)
+from repro.obs.registry import MetricsRegistry, StatsCounter
+from repro.obs.trace import Tracer
 
 NO_WAIT, WAIT_DIE = "NO_WAIT", "WAIT_DIE"
+
+
+def _span(tr, name):
+    """Trace span or no-op: call sites stay branch-free when tracing is
+    off or this txn wasn't sampled."""
+    return tr.span(name) if tr is not None else contextlib.nullcontext()
 
 # base tid for Cluster.load() fixture writes — disjoint from client txns
 # and from migration tids (which use 1 << 40, see repro.db.migrate).  The
@@ -203,7 +216,10 @@ class Cluster:
                  max_inflight: int = 2, wal_mode: str = "segmented",
                  wal_segment_size: int = DEFAULT_SEGMENT_SIZE,
                  checkpoint_interval: int = 0, standby: bool = False,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 telemetry: bool = True,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.nodes = [DBNode(i, protocol, wal_mode=wal_mode,
                              wal_segment_size=wal_segment_size)
                       for i in range(n_nodes)]
@@ -215,7 +231,23 @@ class Cluster:
         self.use_switch = use_switch and hot_index is not None
         self.switch_mode = switch_mode
         self._ts = 0
-        self.stats = collections.Counter()
+        # telemetry plane (repro.obs): on by default, pinned zero-cost —
+        # the registry/tracer never touch engine state, RNG or WALs, so
+        # results/registers/logs are byte-identical with telemetry off
+        # (tests/test_serve.py pin row 10).  ``stats`` stays a
+        # collections.Counter (subclass) either way: every legacy key keeps
+        # working, writes additionally mirror into canonical registry
+        # counters (repro.obs.names.STAT_NAMES).
+        if telemetry:
+            self.metrics = registry if registry is not None \
+                else MetricsRegistry()
+            self.tracer = tracer if tracer is not None else Tracer()
+            self.stats: collections.Counter = StatsCounter(self.metrics,
+                                                           stat_metric)
+        else:
+            self.metrics = None
+            self.tracer = None
+            self.stats = collections.Counter()
         self._inflight: List[tuple] = []    # FIFO of undrained hot groups
         # adaptive hot-set management (repro.core.heat / repro.db.migrate):
         # both stay None unless an EpochController attaches — every hot/cold
@@ -346,15 +378,31 @@ class Cluster:
 
     # -------------------------------------------------------- execution --
     def run(self, txn: Txn, max_retries: int = 10):
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
+        tr = self.tracer.start(f"txn:{txn.kind}") \
+            if self.tracer is not None else None
         if self._inflight:
             self.drain()                    # per-txn path: always drained
         if self._observe(txn):
             self.controller.reconfigure()
-        kind = self.classify(txn)
+        with _span(tr, "classify"):
+            kind = self.classify(txn)
         if kind == "hot":                 # switch txns are abort-free (§5)
+            # "hot" counts ADMISSIONS, exactly once per hot txn — here on
+            # the per-txn path, in run_batch on the batch path; never both
+            # for one txn (run_batch never calls run).  _run_hot must NOT
+            # bump it: warm txns call _run_hot for their switch sub-txn,
+            # which is not a hot admission.  Audited + pinned in
+            # tests/test_dbms.py::test_hot_counter_semantics.
             self.stats["hot"] += 1
-            return self._run_hot(txn)
-        return self._run_with_retries(txn, kind, max_retries)
+            out = self._run_hot(txn, tr=tr)
+        else:
+            out = self._run_with_retries(txn, kind, max_retries)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                H_TXN_LATENCY, help="admission-to-result txn latency",
+                klass=kind).observe(time.perf_counter() - t0)
+        return out
 
     def _validate_mode(self, flags: dict):
         """Reject an explicit switch_mode the packets cannot run under
@@ -366,13 +414,16 @@ class Cluster:
                                        flags["addp_unsafe"])
 
     # hot: switch-only, abort-free, no coordination (paper §5)
-    def _run_hot(self, txn: Txn):
+    def _run_hot(self, txn: Txn, tr=None):
         home = self.nodes[txn.home]
-        pkt, meta = build_packets([txn], self.hot_index, self.switch_cfg)
+        with _span(tr, "packet-build"):
+            pkt, meta = build_packets([txn], self.hot_index, self.switch_cfg)
         self._validate_mode(meta)
         home.log("switch_send", txn.tid, ops=list(txn.ops))
-        pb = self.switch.execute_batch(pkt, meta, mode=self.switch_mode)
-        res = pb.results_np()
+        with _span(tr, "dispatch"):
+            pb = self.switch.execute_batch(pkt, meta, mode=self.switch_mode)
+        with _span(tr, "drain"):
+            res = pb.results_np()
         home.log("switch_result", txn.tid, gid=int(pb.gids[0]),
                  results=res[0, :len(txn.ops)].tolist())
         self.stats["commits"] += 1
@@ -416,31 +467,44 @@ class Cluster:
 
         Returns the per-txn result lists in admission order (None where a
         txn exhausted its retries)."""
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
+        tr = self.tracer.start(f"batch:{len(txns)}") \
+            if self.tracer is not None else None
         results: List[Optional[list]] = [None] * len(txns)
         pending: List[Tuple[int, Txn]] = []
         # without a controller the placement is frozen for the whole batch
         # -> classify every txn with one vectorized index lookup up front
-        kinds = self._classify_batch(txns) if self.controller is None \
-            else None
+        with _span(tr, "classify"):
+            kinds = self._classify_batch(txns) if self.controller is None \
+                else None
         for i, txn in enumerate(txns):
             if self._observe(txn):
                 # drain in-flight hot groups BEFORE the migration touches
                 # the registers or swaps the index (protocol step 1);
                 # migrate() itself drains the async result plane
-                self._flush_hot_group(pending, results)
+                self._flush_hot_group(pending, results, tr=tr)
                 self.controller.reconfigure()
             kind = kinds[i] if kinds is not None else self.classify(txn)
             if kind == "hot":
+                # batch-path twin of the run() admission count: once per
+                # hot txn at admission (see the run() comment + the pin in
+                # tests/test_dbms.py::test_hot_counter_semantics)
                 self.stats["hot"] += 1
                 pending.append((i, txn))
                 continue
             if kind == "warm":
                 # a warm txn touches hot keys: dispatch the buffered group
                 # AND sync every outstanding handle (consistency point)
-                self._flush_hot_group(pending, results)
+                self._flush_hot_group(pending, results, tr=tr)
                 self.drain()
             results[i] = self._run_with_retries(txn, kind, max_retries)
-        self._flush_hot_group(pending, results)
+        self._flush_hot_group(pending, results, tr=tr)
+        if self.metrics is not None:
+            # admission -> dispatch for the async path (results still lazy
+            # on device); admission -> materialized for the sync path
+            self.metrics.histogram(
+                H_BATCH_SERVICE, help="run_batch service time").observe(
+                    time.perf_counter() - t0)
         if self.async_hot:
             return LazyResults(self, results)
         return results
@@ -465,7 +529,7 @@ class Cluster:
         return None
 
     def _flush_hot_group(self, pending: List[Tuple[int, Txn]],
-                         results: List[Optional[list]]):
+                         results: List[Optional[list]], tr=None):
         """Commit all buffered hot txns in as few switch dispatches as the
         engine allows.  Under ``auto`` mode a single multipass-ADDP
         ("unsafe") txn would demote the whole group to the serial engine
@@ -484,14 +548,16 @@ class Cluster:
             lo = 0
             for hi in range(1, len(pending) + 1):
                 if hi == len(pending) or unsafe[hi] != unsafe[lo]:
-                    self._dispatch_hot_group(pending[lo:hi], results)
+                    self._dispatch_hot_group(pending[lo:hi], results, tr=tr)
                     lo = hi
         else:
-            self._dispatch_hot_group(pending, results, prebuilt=(pkts, meta))
+            self._dispatch_hot_group(pending, results, prebuilt=(pkts, meta),
+                                     tr=tr)
         pending.clear()
 
     def _dispatch_hot_group(self, pending: List[Tuple[int, Txn]],
-                            results: List[Optional[list]], prebuilt=None):
+                            results: List[Optional[list]], prebuilt=None,
+                            tr=None):
         """Commit one contiguous run of hot txns in ONE switch dispatch.
 
         Hot txns are abort-free commit-on-send (PR 2), so ``switch_send``
@@ -503,8 +569,9 @@ class Cluster:
         returns to admission, overlapping the NEXT group's packet build
         with this group's device execution."""
         group = [t for _, t in pending]
-        pkts, meta = prebuilt or build_packets(group, self.hot_index,
-                                               self.switch_cfg)
+        with _span(tr, "packet-build"):
+            pkts, meta = prebuilt or build_packets(group, self.hot_index,
+                                                   self.switch_cfg)
         self._validate_mode(meta)
         for t in group:
             # list(t.ops): ops tuples are immutable, no need to repack
@@ -513,26 +580,31 @@ class Cluster:
         # has not executed — a crash here leaves the whole group as
         # unknown-GID entries that recovery must replay
         self._fault("mid_group_dispatch", tids=[t.tid for t in group])
-        if self.async_hot:
-            pb = self.switch.execute_batch(pkts, meta,
-                                           mode=self.switch_mode,
-                                           defer=True)
-        else:
-            # 3-arg call kept for monkeypatch/spy compatibility
-            pb = self.switch.execute_batch(pkts, meta,
-                                           mode=self.switch_mode)
+        with _span(tr, "dispatch"):
+            if self.async_hot:
+                pb = self.switch.execute_batch(pkts, meta,
+                                               mode=self.switch_mode,
+                                               defer=True)
+            else:
+                # 3-arg call kept for monkeypatch/spy compatibility
+                pb = self.switch.execute_batch(pkts, meta,
+                                               mode=self.switch_mode)
         multipass = int(np.count_nonzero(pkts["is_multipass"][:len(group)]))
         self.stats["commits"] += len(group)
         if multipass:
             self.stats["multipass"] += multipass
         if not self.async_hot:
-            self._drain_group(pb, list(pending), meta, results)
+            self._drain_group(pb, list(pending), meta, results, tr)
             # crash AFTER the group fully drained: the armed plan may tear
             # the unsynced tail off a node's open WAL segment
             self._fault("torn_tail", tids=[t.tid for t in group])
             self._note_sends(len(group))
             return
-        self._inflight.append((pb, list(pending), meta, results))
+        self._inflight.append((pb, list(pending), meta, results, tr))
+        if self.metrics is not None:
+            self.metrics.gauge(G_INFLIGHT,
+                               help="undrained async hot groups").set(
+                                   len(self._inflight))
         # crash with undrained handles parked: device work may have run but
         # no response reached any host — result records are lost
         self._fault("undrained_async", inflight=len(self._inflight))
@@ -546,16 +618,25 @@ class Cluster:
         """Barrier: materialize every outstanding hot group, in dispatch
         order — fills client results and WAL ``switch_result`` entries.
         A no-op on the synchronous path (nothing is ever outstanding)."""
+        if not self._inflight:
+            return
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
         while self._inflight:
             self._drain_group(*self._inflight.pop(0))
+        if self.metrics is not None:
+            self.metrics.gauge(G_INFLIGHT).set(0)
+            self.metrics.histogram(
+                H_DRAIN, help="drain barrier duration").observe(
+                    time.perf_counter() - t0)
 
     def _drain_group(self, pb, pending: List[Tuple[int, Txn]], meta,
-                     results: List[Optional[list]]):
+                     results: List[Optional[list]], tr=None):
         """Materialize one group's result plane (compact D2H transfer)
         and scatter it back to clients + WALs, vectorized: one
         ``put_along_axis`` un-permutes all packet slots to txn op order
         instead of a per-op Python loop."""
-        res = pb.results_np()                       # [B, K] host plane
+        with _span(tr, "drain"):
+            res = pb.results_np()                   # [B, K] host plane
         B, K = res.shape
         order = meta["order"]
         n_ops = meta["n_ops"]
@@ -723,6 +804,34 @@ class Cluster:
                                 segments=0, sealed=0))
         return out
 
+    # --------------------------------------------------------- telemetry --
+    def export_metrics(self, fmt: str = "prometheus"):
+        """Refresh point-in-time gauges (engine dispatch counters incl.
+        per-shard counts, per-node WAL depth, in-flight window) and render
+        the registry — ``fmt="prometheus"`` text exposition, ``"json"``
+        snapshot dict.  Read-only with respect to engine state: safe to
+        scrape mid-run."""
+        if self.metrics is None:
+            raise RuntimeError("cluster built with telemetry=False")
+        from repro.obs.export import to_prometheus
+        g = self.metrics.gauge
+        planes = getattr(self.switch, "planes", None) or [self.switch]
+        for i, p in enumerate(planes):
+            g(G_SHARD_DISPATCHES, help="switch dispatches per shard",
+              shard=str(i)).set(p.dispatch_count)
+        g("switch_dispatches", help="total switch write dispatches").set(
+            sum(p.dispatch_count for p in planes))
+        g("switch_read_dispatches", help="total switch read gathers").set(
+            sum(getattr(p, "read_dispatch_count", 0) for p in planes))
+        for n in self.nodes:
+            g(G_WAL_RECORDS, help="WAL records per node",
+              node=str(n.id)).set(len(n.wal))
+        g(G_INFLIGHT, help="undrained async hot groups").set(
+            len(self._inflight))
+        if fmt == "json":
+            return self.metrics.snapshot()
+        return to_prometheus(self.metrics)
+
     def read(self, key: int) -> int:
         """Availability-aware point read of one tuple's committed value.
         Hot keys read the live register (draining first — a consistency
@@ -760,6 +869,7 @@ class Cluster:
         stay lazily device-resident.  While the switch is down, keys
         evicted by the interrupted migration fall back to their home
         stores; any other hot key raises ``SwitchUnavailable``."""
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
         keys = np.asarray(list(keys), np.int64)
         out = np.zeros(len(keys), np.int64)
         hot = self.hot_index.hot_mask_np(keys) if self.use_switch \
@@ -781,6 +891,10 @@ class Cluster:
         for i in np.flatnonzero(~hot):
             out[i] = self.nodes[node_of(int(keys[i]))].store[int(keys[i])]
             self.stats["store_reads"] += 1
+        if self.metrics is not None:
+            self.metrics.histogram(
+                H_READ_BATCH, help="read_batch wall time").observe(
+                    time.perf_counter() - t0)
         return [int(v) for v in out]
 
     def _read_mode(self) -> str:

@@ -40,6 +40,7 @@ cluster without the subsystem (pinned in tests/test_adaptive.py).
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -102,6 +103,7 @@ def migrate(cluster, new_index: HotIndex,
     migration is a consistency point, so every outstanding
     ``PendingBatch`` is materialized (WAL ``switch_result`` entries
     filled) before the registers are touched or the index swapped."""
+    t0 = time.perf_counter()
     cluster.drain()
 
     old_index = cluster.hot_index
@@ -157,6 +159,10 @@ def migrate(cluster, new_index: HotIndex,
     cluster.checkpoint(reason="migration")
     cluster.stats["migrations"] += 1
     cluster.stats["migrated_tuples"] += plan.n_changed
+    if getattr(cluster, "metrics", None) is not None:
+        cluster.metrics.histogram(
+            "migration_seconds", help="migration protocol wall time",
+        ).observe(time.perf_counter() - t0)
     return plan
 
 

@@ -125,6 +125,10 @@ import numpy as np
 from repro.core.heat import HeatTracker
 from repro.core.hotset import HotIndex, layout_for_hotset
 from repro.core.layout import trace_reorderable
+from repro.obs.names import (C_ARRIVALS, C_DROPPED, G_UTILIZATION,
+                             H_ADMISSION_WAIT, H_PHASE, H_TXN_LATENCY)
+from repro.obs.registry import MetricsRegistry, OccupancyMeter
+from repro.obs.trace import Tracer
 from repro.sim.des import Batcher, Resource, Sim, SimLock
 
 
@@ -295,7 +299,10 @@ class ClusterSim:
                  dynamic=None, hot_index: Optional[HotIndex] = None,
                  switch_cfg=None, tracker: Optional[HeatTracker] = None,
                  oracle: bool = False, reconfig_top_k: Optional[int] = None,
-                 layout_seed: int = 0):
+                 layout_seed: int = 0, open_loop_rate: float = 0.0,
+                 max_arrivals: Optional[int] = None,
+                 admit_per_node: Optional[int] = None,
+                 admit_queue_cap: int = 0):
         self.profiles = profiles
         self.n_nodes = n_nodes
         self.wpn = workers_per_node
@@ -361,11 +368,62 @@ class ClusterSim:
             max(1, system.max_batch)
         self.rounds = 0                          # batched switch rounds
         self.round_txns = 0                      # hot txns they carried
+        # telemetry plane (repro.obs): latency histograms and utilization
+        # meters fill on EVERY run (sim-time stamped), but the default
+        # result dict never gains a key — golden pins compare out == golden
+        # whole-dict, so metrics live on ``self.metrics`` and new result
+        # keys appear only in open-loop mode.  Pure-Python accounting:
+        # zero events added, event order untouched.
+        self.metrics = MetricsRegistry(namespace="p4db_sim")
+        self.tracer: Optional[Tracer] = None     # built in run() (sim clock)
+        self._h_lat: Dict[str, object] = {}
+        self._busy = collections.Counter()       # resource -> busy seconds
+        self._occ_credits = OccupancyMeter()
+        self._occ_admit = OccupancyMeter()
+        # open-loop serving mode: Poisson client arrivals at
+        # ``open_loop_rate``/s aggregate (split evenly across nodes)
+        # replace the closed-loop workers.  Admission rides two pools:
+        # every txn holds one of ``admit_per_node`` (default wpn) admit
+        # slots -- hot txns release it at batcher hand-off (commit-on-
+        # send), cold/warm hold it to commit -- and hot txns additionally
+        # take the existing per-node switch credit.  ``admit_queue_cap``
+        # > 0 sheds load: an arrival finding that many waiters is dropped
+        # (counted, not serviced), which also bounds DES event volume at
+        # million-arrival scale.  0.0 = closed-loop workers, untouched.
+        self.open_loop_rate = float(open_loop_rate)
+        self.max_arrivals = max_arrivals
+        self.admit_per_node = admit_per_node
+        self.admit_queue_cap = int(admit_queue_cap)
+        self.arrivals = 0
+        self.dropped = 0
 
     def _charge(self, phase, dt):
         if getattr(self, "sim", None) is not None and \
                 self.sim.now >= self.warmup:
             self.breakdown[phase] += dt
+
+    def _busy_add(self, resource, dt):
+        """Post-warmup busy-seconds accounting for utilization gauges —
+        deliberately NOT part of ``breakdown`` (the result dict's breakdown
+        keys are frozen by the golden pins)."""
+        if self.sim.now >= self.warmup:
+            self._busy[resource] += dt
+
+    def _hist_lat(self, klass):
+        h = self._h_lat.get(klass)
+        if h is None:
+            h = self._h_lat[klass] = self.metrics.histogram(
+                H_TXN_LATENCY, help="sim txn latency (admission/arrival to "
+                "commit, sim time)", klass=klass)
+        return h
+
+    def _hist_phase(self, phase):
+        key = ("phase", phase)
+        h = self._h_lat.get(key)
+        if h is None:
+            h = self._h_lat[key] = self.metrics.histogram(
+                H_PHASE, help="per-phase sim latency", phase=phase)
+        return h
 
     # ------------------------------------------------------------ locks --
     def lock_of(self, key) -> SimLock:
@@ -401,6 +459,8 @@ class ClusterSim:
         self.lat_n[prof.klass] += 1
         self.lat_sum["all"] += dt
         self.lat_n["all"] += 1
+        self._hist_lat(prof.klass).observe(dt)
+        self._hist_lat("all").observe(dt)
         if self.dynamic is not None:
             ph = self.dynamic.phase_of(sim.now)
             self.phase_commits[(ph, prof.klass)] += 1
@@ -439,6 +499,7 @@ class ClusterSim:
                 # the next txn while the round is in flight; the credit
                 # pool bounds outstanding hot txns (closed-loop)
                 yield ("acquire", self.credits[node])
+                self._occ_credits.adjust(+1, sim.now)
                 sim.spawn(self._run_hot_batched(node, prof, t0))
                 continue
             committed = yield from self.run_txn(prof, ts, node)
@@ -503,11 +564,95 @@ class ClusterSim:
     # ------------------------------------------------ batched admission --
     def _run_hot_batched(self, node: int, prof: TxnProfile, t0: float):
         """One hot txn's life under batched admission: join the node's
-        switch-batcher, resume when its round returns, commit."""
-        yield ("join", self.batchers[node], (prof, self.sim.now))
-        if self.sim.now >= self.warmup:
+        switch-batcher, resume when its round returns, commit.  The round
+        resumes every member with its (service_start, service_end) sim
+        timestamps (``_switch_round``'s return value), which stamp the
+        member's trace spans without adding a single event."""
+        t_join = self.sim.now
+        svc = yield ("join", self.batchers[node], (prof, t_join))
+        now = self.sim.now
+        if now >= self.warmup:
             self._account(prof, t0)
+            if self.tracer is not None:
+                tr = self.tracer.start(f"{prof.kind}:{prof.klass}")
+                if tr is not None:
+                    t_s0, t_s1 = svc if isinstance(svc, tuple) else (t_join,
+                                                                     now)
+                    tr.add_span("admission", t0, t_join)
+                    tr.add_span("batcher-join", t_join, t_s0)
+                    tr.add_span("switch-service", t_s0, t_s1)
+                    tr.add_span("commit", t_s1, now)
+        self._occ_credits.adjust(-1, now)
         yield ("release", self.credits[node])
+
+    # ------------------------------------------------ open-loop serving --
+    def _source(self, node: int):
+        """Open-loop Poisson client source for one node: arrivals at
+        ``open_loop_rate / n_nodes`` per second, independent of service
+        progress (unlike the closed-loop workers, which admit only after
+        the previous txn is handed off).  An arrival that finds
+        ``admit_queue_cap`` waiters on the node's admit pool is shed at
+        the door: counted as dropped, zero further events — which is what
+        keeps a million-arrival saturated run tractable."""
+        rate = self.open_loop_rate / self.n_nodes
+        c_arr = self.metrics.counter(C_ARRIVALS, help="client arrivals")
+        c_drop = self.metrics.counter(C_DROPPED, help="arrivals shed at "
+                                      "admission")
+        while True:
+            yield ("delay", float(self.rng.exponential(1.0 / rate)))
+            if self.max_arrivals is not None \
+                    and self.arrivals >= self.max_arrivals:
+                return
+            self.arrivals += 1
+            c_arr.inc()
+            prof = self._demote_if_evicted(self._draw(node))
+            if self.admit_queue_cap and \
+                    len(self.admits[node].queue) >= self.admit_queue_cap:
+                self.dropped += 1
+                c_drop.inc()
+                continue
+            self.sim.spawn(self._serve_arrival(node, prof, self.sim.now))
+
+    def _serve_arrival(self, node: int, prof: TxnProfile, t_arr: float):
+        """One client txn's life in open-loop mode, latency measured from
+        ARRIVAL (so admission queueing is part of the tail — the number an
+        SLO talks about).  Per-class admission rides the existing pools:
+        every txn occupies an admit slot (server worker capacity); a hot
+        txn under batching releases it at batcher hand-off (commit-on-
+        send) and is bounded by the per-node switch credit pool instead;
+        cold/warm txns hold the slot through 2PL/2PC retries to commit."""
+        sim, T = self.sim, self.T
+        yield ("acquire", self.admits[node])
+        self._occ_admit.adjust(+1, sim.now)
+        if sim.now >= self.warmup:
+            self._hist_phase("admission").observe(sim.now - t_arr)
+            self.metrics.histogram(
+                H_ADMISSION_WAIT, help="arrival to admit-slot wait",
+                klass=prof.klass).observe(sim.now - t_arr)
+        yield ("delay", T.t_client)
+        if self.batching and prof.klass == "hot":
+            yield ("acquire", self.credits[node])
+            self._occ_credits.adjust(+1, sim.now)
+            sim.spawn(self._run_hot_batched(node, prof, t_arr))
+            self._occ_admit.adjust(-1, sim.now)
+            yield ("release", self.admits[node])
+            return
+        self._ts += 1
+        committed = yield from self.run_txn(prof, self._ts, node)
+        attempt = 1
+        while not committed:
+            self.aborts[prof.klass] += 1
+            yield ("delay", float(self.rng.exponential(
+                min(T.t_backoff * attempt, 100e-6))))
+            if self.sys.drop_on_abort:
+                break
+            attempt += 1
+            self._ts += 1
+            committed = yield from self.run_txn(prof, self._ts, node)
+        if committed and sim.now >= self.warmup:
+            self._account(prof, t_arr)
+        self._occ_admit.adjust(-1, sim.now)
+        yield ("release", self.admits[node])
 
     def _nic_xfer(self, node: int, n_pkts: int):
         """Serialize ``n_pkts`` hot-txn packets through the node's NIC:
@@ -604,6 +749,10 @@ class ClusterSim:
         yield from self._reconfig_gate()
         for _, t_join in items:
             self._charge("batch_wait", t_start - t_join)
+        if self.sim.now >= self.warmup:
+            h_join = self._hist_phase("batcher-join")
+            for _, t_join in items:
+                h_join.observe(max(0.0, t_start - t_join))
         self._charge("switch", T.rtt_switch)
         if self.sys.nic_line_rate > 0:
             yield from self._nic_xfer(node, len(items))       # TX burst
@@ -634,9 +783,11 @@ class ClusterSim:
             yield ("acquire", self.pipe)
             self._charge("pipe_lock_wait", self.sim.now - t0)
             self._charge("recirc", extra)
+            self._busy_add("pipeline", base + extra)
             yield ("delay", base + extra)
             yield ("release", self.pipe)
         else:
+            self._busy_add("pipeline", base)
             yield ("delay", base)
         yield ("delay", T.rtt_switch / 2)
         if self.sys.nic_line_rate > 0:
@@ -644,6 +795,10 @@ class ClusterSim:
         self.rounds += 1
         self.round_txns += len(items)
         self._sends_since_ckpt += len(items) - n_read
+        if self.sim.now >= self.warmup:
+            self._hist_phase("switch-service").observe(self.sim.now - t_start)
+        # members resume with the service window (trace span stamps)
+        return (t_start, self.sim.now)
 
     def switch_txn(self, prof: TxnProfile, node: Optional[int] = None):
         T = self.T
@@ -666,12 +821,14 @@ class ClusterSim:
             # the read tier: single transit at the read-path rate, no
             # pipeline lock, no recirculation, no checkpointable send
             self._charge("read_pipe", T.t_read_pipe)
+            self._busy_add("pipeline", T.t_read_pipe)
             yield ("delay", T.t_read_pipe)
             yield ("delay", T.rtt_switch / 2)
             if self.sys.nic_line_rate > 0:
                 yield from self._nic_xfer(node, 1)            # RX
             return
         if prof.passes == 1:
+            self._busy_add("pipeline", T.t_pipe)
             yield ("delay", T.t_pipe)
         else:
             # multi-pass: pipeline lock + recirculations
@@ -680,6 +837,7 @@ class ClusterSim:
             self._charge("pipe_lock_wait", self.sim.now - t0)
             rc = T.t_recirc_fast if self.sys.fast_recirc else T.t_recirc
             self._charge("recirc", (prof.passes - 1) * rc)
+            self._busy_add("pipeline", T.t_pipe + (prof.passes - 1) * rc)
             yield ("delay", T.t_pipe + (prof.passes - 1) * rc)
             yield ("release", self.pipe)
         yield ("delay", T.rtt_switch / 2)
@@ -870,10 +1028,20 @@ class ClusterSim:
         self.ingresses = [Resource(1)
                           for _ in range(max(1, self.sys.n_switches))]
         self.ingress = self.ingresses[0]         # shared switch ingress
-        for node in range(self.n_nodes):
-            for w in range(self.wpn):
-                g = self.worker(node)
-                self.sim.spawn(g, delay=float(self.rng.random() * 1e-6))
+        self.tracer = Tracer(clock=lambda: self.sim.now, capacity=256)
+        if self.open_loop_rate > 0:
+            # open-loop serving: Poisson sources replace the closed-loop
+            # workers; admit pool sized like the worker pool it displaces
+            self.admits = [Resource(self.admit_per_node or self.wpn)
+                           for _ in range(self.n_nodes)]
+            for node in range(self.n_nodes):
+                self.sim.spawn(self._source(node),
+                               delay=float(self.rng.random() * 1e-6))
+        else:
+            for node in range(self.n_nodes):
+                for w in range(self.wpn):
+                    g = self.worker(node)
+                    self.sim.spawn(g, delay=float(self.rng.random() * 1e-6))
         if self._reconfig_on:
             self.sim.spawn(self._controller())
         if self.sys.ckpt_interval > 0:
@@ -891,6 +1059,21 @@ class ClusterSim:
                    if self.rounds else 0.0)
         for k in self.lat_n:
             out[f"lat_{k}"] = self.lat_sum[k] / max(self.lat_n[k], 1)
+        self._finish_metrics(window)
+        if self.open_loop_rate > 0:
+            # open-loop-only result keys (a new mode: the default result
+            # dict stays frozen for the golden pins)
+            out["open_loop"] = dict(
+                offered_rate=self.open_loop_rate, arrivals=self.arrivals,
+                dropped=self.dropped, served=self.commits["total"],
+                achieved_rate=self.commits["total"] / window)
+            out["latency"] = {
+                k: dict(p50=h.percentile(0.50), p99=h.percentile(0.99),
+                        p999=h.percentile(0.999), mean=h.mean,
+                        count=h.count)
+                for k, h in sorted((k, h) for k, h in self._h_lat.items()
+                                   if isinstance(k, str))}
+            out["utilization"] = self._utilization(window)
         # durability keys appear only when the knob is on — the default
         # result dict stays byte-identical to the golden pins
         if self.sys.crash_at > 0:
@@ -923,3 +1106,39 @@ class ClusterSim:
                 ph: (d.get("hot", 0) + d.get("warm", 0)) / max(d["total"], 1)
                 for ph, d in phases.items()}
         return out
+
+    def _utilization(self, window: float) -> dict:
+        """Per-resource utilization over the post-warmup window: busy (or
+        occupied) seconds / (window x capacity).  Credit/admit pools use
+        the time-weighted occupancy integral over the whole run (their
+        level carries across the warmup boundary)."""
+        util = {}
+        if self.sys.nic_line_rate > 0:
+            util["nic"] = self.breakdown["nic_wire"] / (window * self.n_nodes)
+        if self.sys.switch_service_rate > 0:
+            util["switch_ingress"] = self.breakdown["switch_ingress"] / \
+                (window * max(1, self.sys.n_switches))
+        util["pipeline"] = self._busy["pipeline"] / \
+            (window * max(1, self.sys.pipeline_locks))
+        pool = self.hot_credits * self.n_nodes
+        util["credits"] = self._occ_credits.integral(self.sim.now) / \
+            (self.sim_time * pool) if pool else 0.0
+        if self.open_loop_rate > 0:
+            slots = (self.admit_per_node or self.wpn) * self.n_nodes
+            util["admit"] = self._occ_admit.integral(self.sim.now) / \
+                (self.sim_time * slots) if slots else 0.0
+        return util
+
+    def _finish_metrics(self, window: float):
+        """End-of-run registry refresh: utilization gauges + headline
+        counters, so an export scraped after ``run()`` is complete."""
+        g = self.metrics.gauge
+        for res, v in self._utilization(window).items():
+            g(G_UTILIZATION, help="busy fraction over the measured window",
+              resource=res).set(v)
+        self.metrics.counter("txns_committed_total",
+                             help="committed txns")._set(
+                                 self.commits["total"])
+        self.metrics.counter("txn_aborts_total", help="aborts")._set(
+            sum(self.aborts.values()))
+        g("switch_rounds", help="batched switch rounds").set(self.rounds)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.hotset import build_hot_index
-from repro.core.packets import ADD, READ, WRITE, SwitchConfig
+from repro.core.packets import ADD, CADD, READ, WRITE, SwitchConfig
 from repro.db.dbms import Cluster
 from repro.db.txn import Txn, key_of
 from repro.workloads import smallbank, tpcc, ycsb
@@ -125,3 +125,67 @@ def test_smallbank_constraints_hold():
     slots = list(hi.placement.slot.values())
     for _, s, r in slots:
         assert regs[s, r] >= 0
+
+
+def test_hot_counter_semantics():
+    """Counter-semantics audit pin (ISSUE 9 satellite 6).  The claimed
+    "hot double-count on the batch path" does NOT exist: "hot" counts
+    admissions, exactly once per hot txn, on BOTH the per-txn and batch
+    paths; a warm txn's switch sub-txn never bumps it.  "cold"/"warm"
+    count execution *attempts* -- each retry after an abort bumps again,
+    and exhaustion adds one "gave_up"."""
+    p = ycsb.YCSBParams(n_nodes=4, keys_per_node=1000, hot_per_node=16)
+    sample = ycsb.generate(np.random.default_rng(0), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 64, SW)
+    txns = ycsb.generate(np.random.default_rng(6), 250, p)
+
+    # oracle: classification alone, no execution
+    oracle = Cluster(4, SW, hi, use_switch=True)
+    n_hot = sum(oracle.classify(t) == "hot" for t in txns)
+    assert n_hot > 0
+
+    c_run = Cluster(4, SW, hi, use_switch=True)
+    c_run.snapshot_offload()
+    for t in copy.deepcopy(txns):
+        c_run.run(t)
+    assert c_run.stats["hot"] == n_hot          # once per admission
+
+    c_batch = Cluster(4, SW, hi, use_switch=True)
+    c_batch.snapshot_offload()
+    c_batch.run_batch(copy.deepcopy(txns))
+    c_batch.drain()
+    assert c_batch.stats["hot"] == n_hot        # batch path: same count
+
+    # a warm txn calls _run_hot for its switch sub-txn; that is NOT a hot
+    # admission and must not bump "hot"
+    hot_key = next(iter(hi.placement.slot))
+    cold_key = next(k for n in range(4) for i in range(1000)
+                    if not hi.is_hot(k := key_of(n, i)))
+    c_warm = Cluster(4, SW, hi, use_switch=True)
+    c_warm.snapshot_offload()
+    out = c_warm.run(Txn("warm", [(ADD, hot_key, 1), (ADD, cold_key, 1)],
+                         home=0))
+    assert out is not None
+    assert c_warm.stats["warm"] == 1 and c_warm.stats["hot"] == 0
+
+    # attempts semantics: a doomed cold CADD (balance 0, delta -5) aborts
+    # every attempt -- one "cold" bump per attempt, one final "gave_up"
+    c_cold = Cluster(4, SW, hot_index=None, use_switch=False)
+    out = c_cold.run(Txn("doomed", [(CADD, cold_key, -5)], home=0),
+                     max_retries=4)
+    assert out is None
+    assert c_cold.stats["cold"] == 4
+    assert c_cold.stats["aborts"] == 4
+    assert c_cold.stats["gave_up"] == 1
+    assert c_cold.stats["hot"] == 0
+
+    # same attempts rule on the warm path (cold part is abort-proofed
+    # first, so the constraint failure retries the whole warm txn)
+    c_wd = Cluster(4, SW, hi, use_switch=True)
+    c_wd.snapshot_offload()
+    out = c_wd.run(Txn("doomed-warm", [(ADD, hot_key, 1),
+                                       (CADD, cold_key, -5)], home=0),
+                   max_retries=3)
+    assert out is None
+    assert c_wd.stats["warm"] == 3 and c_wd.stats["gave_up"] == 1
+    assert c_wd.stats["hot"] == 0

@@ -1,0 +1,263 @@
+"""Observability plane unit pins (ISSUE 9 satellite 3).
+
+Contracts pinned here:
+  * Histogram quantiles vs a numpy oracle -- the log-bucket estimate is
+    within one bucket ratio of the exact sample quantile.
+  * ``observe_many`` is exactly the loop of ``observe``.
+  * Tracer sampling is counter-based and deterministic; two identical
+    async-dispatch runs produce identical (label, span names, depths)
+    sequences even though the hot path defers result materialization.
+  * Arrival processes are seed-deterministic with the right mean rate.
+  * Prometheus export round-trips through the strict parser; corrupted
+    text is rejected; the ``--check`` CLI exits 0.
+  * The shared name table covers every stats key both layers emit.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.hotset import build_hot_index
+from repro.core.packets import SwitchConfig
+from repro.db.dbms import Cluster
+from repro.obs import (FUNCTIONAL_SPANS, MetricsRegistry, STAT_NAMES,
+                       Tracer, bursty_arrivals, parse_prometheus,
+                       poisson_arrivals, stat_metric, to_json,
+                       to_prometheus, unify_cluster_stats, unify_sim_result)
+from repro.obs.export import main as export_main
+from repro.obs.registry import Histogram, PER_DECADE, log_bucket_bounds
+from repro.workloads import ycsb
+
+SW = SwitchConfig(n_stages=16, regs_per_stage=512, max_instrs=16)
+RATIO = 10.0 ** (1.0 / PER_DECADE)
+
+
+# ------------------------------------------------------------- histograms --
+
+def test_histogram_percentiles_vs_numpy_oracle():
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(mean=np.log(1e-4), sigma=1.5, size=20_000)
+    vals = np.clip(vals, 2e-7, 5.0)
+    h = Histogram("lat")
+    h.observe_many(vals)
+    # estimate within ~one bucket ratio of the exact sample quantile
+    # (1.5x margin: the oracle rank and the bucket-walk rank can straddle
+    # an edge)
+    bound = RATIO ** 1.5
+    for q in (0.5, 0.9, 0.99, 0.999):
+        exact = float(np.quantile(vals, q, method="inverted_cdf"))
+        est = h.percentile(q)
+        assert exact / bound <= est <= exact * bound, (q, est, exact)
+    assert h.count == len(vals)
+    assert h.mean == pytest.approx(float(vals.mean()))
+
+
+def test_histogram_observe_many_equals_loop():
+    rng = np.random.default_rng(11)
+    vals = rng.exponential(1e-3, size=500)
+    h_bulk, h_loop = Histogram("a"), Histogram("b")
+    h_bulk.observe_many(vals)
+    for v in vals:
+        h_loop.observe(v)
+    np.testing.assert_array_equal(h_bulk.counts, h_loop.counts)
+    assert h_bulk.sum == pytest.approx(h_loop.sum)
+    assert h_bulk.percentile(0.99) == h_loop.percentile(0.99)
+
+
+def test_histogram_edges_and_empty():
+    h = Histogram("x")
+    assert h.percentile(0.5) == 0.0          # empty -> 0, not NaN
+    h.observe(0.0)                            # below lo -> first bucket
+    h.observe(1e9)                            # above hi -> +Inf bucket
+    assert h.count == 2
+    assert h.counts[0] == 1 and h.counts[-1] == 1
+    # +Inf-bucket quantile clamps to the top edge instead of inventing mass
+    assert h.percentile(0.999) == float(h.bounds[-1])
+    bounds = log_bucket_bounds()
+    assert np.all(np.diff(bounds) > 0)
+    assert bounds[0] == pytest.approx(1e-7) and bounds[-1] == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------- tracing --
+
+def test_tracer_counter_sampling_is_deterministic():
+    def run_once():
+        tr = Tracer(clock=lambda: 0.0, capacity=8, sample_every=3)
+        got = []
+        for i in range(20):
+            t = tr.start(f"txn:{i % 2}")
+            got.append(t is not None)
+            if t is not None:
+                with t.span("outer"):
+                    with t.span("inner"):
+                        pass
+        return tr, got
+    tr1, got1 = run_once()
+    tr2, got2 = run_once()
+    assert got1 == got2                        # no RNG anywhere
+    assert got1[0] is True                     # first call always sampled
+    assert sum(got1) == 7                      # ceil(20 / 3)
+    assert tr1.started == 7                    # traces actually handed out
+    assert len(tr1.traces) == 7                # ring capacity 8 not hit
+    key = lambda tr: [(t.label, t.names(), [s.depth for s in t.spans])
+                      for t in tr.traces]
+    assert key(tr1) == key(tr2)
+    assert key(tr1)[0][1] == ["outer", "inner"]
+    assert key(tr1)[0][2] == [0, 1]            # nesting depth from the stack
+
+
+def test_trace_ring_capacity_bounds_memory():
+    tr = Tracer(clock=lambda: 0.0, capacity=4, sample_every=1)
+    for i in range(100):
+        tr.start(f"t{i}")
+    assert tr.started == 100
+    assert [t.label for t in tr.traces] == ["t96", "t97", "t98", "t99"]
+
+
+def test_trace_span_order_deterministic_under_async_dispatch():
+    """Two identical async-hot runs must record identical trace structure:
+    async dispatch defers result materialization, but span emission order
+    is the admission order, not the drain order."""
+    p = ycsb.YCSBParams(n_nodes=4, keys_per_node=1000, hot_per_node=16)
+    sample = ycsb.generate(np.random.default_rng(0), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 64, SW)
+    txns = ycsb.generate(np.random.default_rng(3), 120, p)
+
+    def run_once():
+        tr = Tracer(capacity=256, sample_every=1)
+        c = Cluster(4, SW, hi, use_switch=True, async_hot=True, tracer=tr)
+        c.snapshot_offload()
+        c.run_batch(copy.deepcopy(txns))
+        c.drain()
+        for t in copy.deepcopy(txns)[:20]:
+            c.run(t)
+        return c, [(t.label, tuple(t.names()),
+                    tuple(s.depth for s in t.spans)) for t in tr.traces]
+
+    c1, k1 = run_once()
+    c2, k2 = run_once()
+    assert k1 == k2
+    assert c1.stats == c2.stats
+    # every span name spoken by the functional layer is in the shared
+    # vocabulary, and per-txn hot traces start with classify
+    for label, names, _ in k1:
+        assert set(names) <= set(FUNCTIONAL_SPANS)
+        if label == "txn:hot":
+            assert names[0] == "classify" and "packet-build" in names
+
+
+# ------------------------------------------------------------- load gen --
+
+def test_poisson_arrivals_seeded_and_rate():
+    a1 = poisson_arrivals(1e4, 50_000, seed=5)
+    a2 = poisson_arrivals(1e4, 50_000, seed=5)
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, poisson_arrivals(1e4, 50_000, seed=6))
+    assert np.all(np.diff(a1) >= 0)
+    rate = len(a1) / a1[-1]
+    assert rate == pytest.approx(1e4, rel=0.05)
+
+
+def test_bursty_arrivals_seeded_rate_and_burstier_tail():
+    b1 = bursty_arrivals(1e4, 30_000, seed=9, burst=16, cv=4.0)
+    np.testing.assert_array_equal(
+        b1, bursty_arrivals(1e4, 30_000, seed=9, burst=16, cv=4.0))
+    assert np.all(np.diff(b1) >= 0)
+    assert len(b1) / b1[-1] == pytest.approx(1e4, rel=0.10)
+    # same mean rate, higher gap variability than Poisson
+    p = poisson_arrivals(1e4, 30_000, seed=9)
+    cv2 = lambda a: float(np.var(np.diff(a)) / np.mean(np.diff(a)) ** 2)
+    assert cv2(b1) > 1.5 * cv2(p)
+
+
+# ------------------------------------------------------------- exporter --
+
+def _toy_registry():
+    reg = MetricsRegistry(namespace="p4db")
+    reg.counter("txns_committed_total", help="commits").inc(7)
+    reg.gauge("inflight_batches").set(3)
+    h = reg.histogram("txn_latency_seconds", help="lat", klass="hot")
+    h.observe_many([1e-5, 2e-5, 3e-4, 0.5])
+    reg.histogram("txn_latency_seconds", klass="cold").observe(2e-3)
+    return reg
+
+
+def test_prometheus_export_round_trips():
+    reg = _toy_registry()
+    text = to_prometheus(reg)
+    fams = parse_prometheus(text)
+    assert set(fams) == {"p4db_txns_committed_total", "p4db_inflight_batches",
+                         "p4db_txn_latency_seconds"}
+    assert fams["p4db_txn_latency_seconds"]["type"] == "histogram"
+    counts = [v for n, lbl, v in fams["p4db_txn_latency_seconds"]["samples"]
+              if n.endswith("_count")]
+    assert sorted(counts) == [1, 4]
+    # labels survive the round trip
+    klasses = {lbl.get("klass")
+               for _, lbl, _ in fams["p4db_txn_latency_seconds"]["samples"]}
+    assert klasses == {"hot", "cold"}
+    # JSON snapshot agrees on the headline numbers
+    snap = reg.snapshot()
+    assert snap["txns_committed_total"]["samples"][0]["value"] == 7
+    assert sum(s["count"]
+               for s in snap["txn_latency_seconds"]["samples"]) == 5
+    assert isinstance(to_json(reg), str)
+
+
+@pytest.mark.parametrize("mangle", [
+    lambda t: t.replace("# TYPE", "# TIPE", 1),                # bad comment
+    lambda t: "p4db_orphan_total 3\n" + t,                     # no TYPE
+    lambda t: t.replace(' 7', ' seven'),                       # bad value
+    lambda t: t.replace('le="+Inf"', 'le="0.001"'),            # no +Inf edge
+])
+def test_prometheus_parser_rejects_corruption(mangle):
+    text = to_prometheus(_toy_registry())
+    with pytest.raises(ValueError):
+        parse_prometheus(mangle(text))
+
+
+def test_export_check_cli(tmp_path, capsys):
+    assert export_main(["--check"]) == 0            # built-in demo export
+    f = tmp_path / "scrape.prom"
+    f.write_text(to_prometheus(_toy_registry()))
+    assert export_main(["--check", str(f)]) == 0
+    f.write_text("not { a metric\n")
+    assert export_main(["--check", str(f)]) == 1
+    capsys.readouterr()
+
+
+# ------------------------------------------------------------ name table --
+
+def test_stat_name_table_covers_cluster_stats():
+    p = ycsb.YCSBParams(n_nodes=4, keys_per_node=1000, hot_per_node=16)
+    sample = ycsb.generate(np.random.default_rng(0), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 64, SW)
+    c = Cluster(4, SW, hi, use_switch=True)
+    c.snapshot_offload()
+    for t in ycsb.generate(np.random.default_rng(1), 200, p):
+        c.run(t)
+    uni = unify_cluster_stats(c.stats)
+    # every live stats key has a canonical spelling in the shared table
+    for k in c.stats:
+        assert k in STAT_NAMES, f"stats key {k!r} missing from STAT_NAMES"
+    assert uni["txns_hot_total"] == c.stats["hot"]
+    assert uni["txns_committed_total"] == c.stats["commits"]
+    # the registry mirror carries the same values under the same names
+    reg_names = {fam.name for fam in c.metrics.families()}
+    assert {"txns_hot_total", "txns_committed_total"} <= reg_names
+    assert c.metrics.get("txns_hot_total").value == c.stats["hot"]
+    # unknown keys degrade to a generated name instead of being dropped
+    name, _ = stat_metric("weird key!")
+    assert name == "stat_weird_key__total"
+
+
+def test_sim_result_unifies_to_same_vocabulary():
+    out = {"throughput": 2.5e6, "commits": {"hot": 10, "cold": 4},
+           "aborts": {"cold": 2}, "lat_all": 1e-5, "switch_rounds": 9}
+    uni = unify_sim_result(out)
+    assert uni["txns_committed_total"] == 14
+    assert uni["txns_hot_total"] == 10
+    assert uni["txn_aborts_total"] == 2
+    assert uni["throughput_txns_per_second"] == 2.5e6
+    assert uni["switch_rounds_total"] == 9
+    assert uni["latency_mean_seconds"] == {"all": 1e-5}

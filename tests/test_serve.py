@@ -1,0 +1,221 @@
+"""Open-loop serving pins (ISSUE 9 satellite 3) + pin row 10: telemetry is
+observably zero-cost.
+
+  * Registry-off identity -- the same txn stream through a telemetry=True
+    and a telemetry=False cluster yields byte-identical results, stats,
+    switch registers and WAL records (hash chain included).
+  * Open-loop DES determinism -- same seed, same full result dict; a
+    closed-loop run gains NO new result keys (golden fixtures elsewhere
+    stay valid).
+  * Admission shedding, the functional driver's low-load/overload
+    behavior, the gather-window group-commit knob, and ``find_knee``.
+
+The functional-driver tests use a stub cluster + a deterministic fake
+clock so they pin the *driver's* queueing math exactly, with no engine
+noise and no wall-clock flakiness.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from benchmarks import common as C
+from repro.core.hotset import build_hot_index
+from repro.core.packets import SwitchConfig
+from repro.db.dbms import Cluster
+from repro.obs import (MetricsRegistry, find_knee, poisson_arrivals,
+                       serve_open_loop)
+from repro.workloads import ycsb
+
+SW = SwitchConfig(n_stages=16, regs_per_stage=512, max_instrs=16)
+
+
+# ------------------------------------------------- pin row 10: zero cost --
+
+def _ycsb_setup(n_txns=200):
+    p = ycsb.YCSBParams(n_nodes=4, keys_per_node=1000, hot_per_node=16)
+    sample = ycsb.generate(np.random.default_rng(0), 1500, p)
+    hi = build_hot_index(ycsb.traces(sample), 64, SW)
+    txns = ycsb.generate(np.random.default_rng(4), n_txns, p)
+    return hi, txns
+
+
+def _wal_records(c):
+    return [[(r.lsn, r.kind, r.tid, r.payload, r.prev, r.hash)
+             for r in list(n.wal)] for n in c.nodes]
+
+
+def test_telemetry_off_identity_pin():
+    """Pin row 10: results, stats, registers and WALs are identical with
+    telemetry on (default) vs off -- the obs plane can never perturb
+    engine state."""
+    hi, txns = _ycsb_setup()
+
+    def run(telemetry):
+        c = Cluster(4, SW, hi, use_switch=True, telemetry=telemetry)
+        c.snapshot_offload()
+        outs = [c.run(t) for t in copy.deepcopy(txns[:120])]
+        outs.append(list(c.run_batch(copy.deepcopy(txns[120:]))))
+        c.drain()
+        return c, outs
+
+    c_on, out_on = run(True)
+    c_off, out_off = run(False)
+    assert out_on == out_off
+    assert dict(c_on.stats) == dict(c_off.stats)
+    np.testing.assert_array_equal(np.asarray(c_on.switch.registers),
+                                  np.asarray(c_off.switch.registers))
+    assert _wal_records(c_on) == _wal_records(c_off)   # hash chain included
+    # and the telemetry surface only exists on the on-side
+    assert c_on.metrics is not None and c_on.tracer is not None
+    assert c_off.metrics is None and c_off.tracer is None
+    with pytest.raises(RuntimeError):
+        c_off.export_metrics()
+
+
+# ----------------------------------------------------- DES open loop pins --
+
+@pytest.fixture(scope="module")
+def serve_profiles():
+    profs, _ = C.ycsb_profiles(variant="A", n=1200)
+    return profs
+
+
+def test_open_loop_sim_seed_deterministic(serve_profiles):
+    sys = C.serve_system("p4db")
+    kw = dict(sim_time=0.01, seed=5, max_arrivals=20_000)
+    o1 = C.run_open_loop_sim(serve_profiles, sys, 1e6, **kw)
+    o2 = C.run_open_loop_sim(serve_profiles, sys, 1e6, **kw)
+    assert o1 == o2
+    ol = o1["open_loop"]
+    assert ol["offered_rate"] == 1e6
+    assert 0 < ol["served"] <= ol["arrivals"] <= 20_000
+    # latency tail exists and is ordered
+    lat = o1["latency"]["all"]
+    assert 0 < lat["p50"] <= lat["p99"] <= lat["p999"]
+
+
+def test_closed_loop_result_gains_no_new_keys(serve_profiles):
+    """Golden-fixture safety: the open-loop result keys appear ONLY when
+    open_loop_rate > 0; a default closed-loop run is untouched."""
+    out = C.run_sim(serve_profiles, C.serve_system("p4db"), sim_time=0.01)
+    for k in ("open_loop", "latency", "utilization"):
+        assert k not in out, k
+    assert out["throughput"] > 0
+
+
+def test_admission_cap_sheds_under_overload(serve_profiles):
+    sys = C.serve_system("p4db")
+    rate = 8e6                                 # far past the serving knee
+    tight = C.run_open_loop_sim(serve_profiles, sys, rate, sim_time=0.01,
+                                seed=7, max_arrivals=30_000,
+                                admit_queue_cap=4)["open_loop"]
+    loose = C.run_open_loop_sim(serve_profiles, sys, rate, sim_time=0.01,
+                                seed=7, max_arrivals=30_000,
+                                admit_queue_cap=256)["open_loop"]
+    assert tight["dropped"] > 0
+    assert tight["dropped"] > loose["dropped"]  # tighter door sheds more
+    assert tight["served"] + tight["dropped"] <= tight["arrivals"] + 1
+
+
+def test_serve_sim_row_matches_functional_row_schema(serve_profiles):
+    out = C.run_open_loop_sim(serve_profiles, C.serve_system("p4db"), 5e5,
+                              sim_time=0.01, seed=1, max_arrivals=5_000)
+    row = C.serve_sim_row(out)
+    # the SLO columns shared with the functional ServeResult rows
+    assert {"offered_rate", "achieved_rate", "arrivals", "served",
+            "dropped", "p50", "p99", "p999", "mean"} <= set(row)
+    assert row["served"] <= row["arrivals"]
+
+
+# ------------------------------------------- functional driver (stubbed) --
+
+class _StubCluster:
+    """Records dispatched batch sizes; no engine, no wall clock."""
+
+    def __init__(self):
+        self.batches = []
+
+    def run_batch(self, txns):
+        self.batches.append(len(txns))
+
+    def drain(self):
+        pass
+
+
+class _FakeClock:
+    """Each (t0, t1) pair around a dispatch advances by `svc` seconds, so
+    every batch has an exact, deterministic service time."""
+
+    def __init__(self, svc):
+        self.svc = svc
+        self.t = 0.0
+        self.calls = 0
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls % 2 == 0:            # second call of the pair
+            self.t += self.svc
+        return self.t
+
+
+def _serve(rate, n, svc=1e-3, batch=8, seed=0, **kw):
+    stub = _StubCluster()
+    arr = poisson_arrivals(rate, n, seed=seed)
+    res = serve_open_loop(stub, list(range(n)), arr, batch=batch,
+                          clock=_FakeClock(svc), **kw)
+    return res, stub
+
+
+def test_serve_open_loop_below_capacity():
+    # capacity = batch/svc = 8000/s; offer 1000/s
+    res, _ = _serve(1e3, 400, max_backlog=64)
+    assert res["dropped"] == 0
+    assert res["served"] == res["arrivals"] == 400
+    assert res["achieved_rate"] == pytest.approx(res["offered_rate"], rel=0.05)
+    assert res["p50"] <= res["p99"] <= res["p999"]
+    assert res["p999"] < 0.1                  # no queueing blow-up
+
+
+def test_serve_open_loop_overload_sheds_and_tail_blows_up():
+    light, _ = _serve(1e3, 400, max_backlog=256)
+    heavy, _ = _serve(5e4, 2000, max_backlog=256)
+    assert heavy["dropped"] > 0
+    assert heavy["backlog_peak"] == 256       # admission holds the bound
+    assert heavy["achieved_rate"] < 0.5 * heavy["offered_rate"]
+    assert heavy["p99"] > 10 * light["p99"]   # the open-loop knee signature
+    assert heavy["served"] + heavy["dropped"] == heavy["arrivals"]
+
+
+def test_serve_open_loop_registry_wiring():
+    reg = MetricsRegistry()
+    stub = _StubCluster()
+    arr = poisson_arrivals(5e4, 500, seed=3)
+    serve_open_loop(stub, list(range(500)), arr, batch=8,
+                    max_backlog=16, registry=reg, clock=_FakeClock(1e-3))
+    assert reg.get("arrivals_total").value == 500
+    assert reg.get("admission_dropped_total").value > 0
+    assert reg.get("txn_latency_seconds", klass="all").count > 0
+
+
+def test_gather_window_fills_batches_at_light_load():
+    # 1000/s arrivals, 1ms service: without a window the driver dispatches
+    # almost every txn alone; a 50ms window gathers full batches.
+    res0, stub0 = _serve(1e3, 300, batch=8, gather_window=0.0)
+    resw, stubw = _serve(1e3, 300, batch=8, gather_window=0.05)
+    assert np.mean(stubw.batches) > 2 * np.mean(stub0.batches)
+    assert max(stubw.batches) == 8
+    # the window trades a bounded latency floor for batch amortization
+    assert resw["p50"] > res0["p50"]
+    assert resw["p50"] < 0.05 + 3e-3          # window + a few service times
+    # nothing is lost either way
+    assert res0["served"] == resw["served"] == 300
+
+
+def test_find_knee_synthetic():
+    rows = [dict(offered_rate=r, achieved_rate=a) for r, a in
+            [(100, 100), (200, 199), (400, 390), (800, 500), (1600, 510)]]
+    assert find_knee(rows) == 400
+    assert find_knee(rows, achieved_frac=0.6) == 800
+    assert find_knee([dict(offered_rate=100, achieved_rate=10)]) == 0.0
+    assert find_knee([]) == 0.0

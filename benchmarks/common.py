@@ -417,6 +417,20 @@ def durability_standby_row(txns, hi, interval):
     return dict(interval=interval, takeover_s=dt, replayed=known + unknown)
 
 
+def storm_profiles(gen_name="ycsb_a_storm", n=1500, seed=0, n_nodes=4,
+                   params=None):
+    """Cold TxnProfiles for a contention storm (PR 10): every txn is
+    cold-classified (hot_index=None), so the whole stream funnels through
+    the 2PL/2PC path the early-abort detector watches.  Returns
+    ``(profiles, params)``; seed the sim's contended locks with
+    ``ClusterSim.lock_of(k) for k in storms.contended_keys(params)``."""
+    from repro.workloads import storms
+    p = params or storms.StormParams(n_nodes=n_nodes)
+    gen = getattr(storms, gen_name)
+    txns = gen(np.random.default_rng(seed), n, p)
+    return [profile_txn(t, None, t.home) for t in txns], p
+
+
 def durability_sim_rows(sim_time=0.01, seed=3,
                         ckpt_intervals=tuple(DURABILITY_SIM_CKPTS)):
     """Priced failover in the DES: one switch crash at 70% of the run,

@@ -400,6 +400,8 @@ SUMMARY_HEADLINES = [
      "switch-served hot reads vs store-served baseline (PR 8)"),
     ("BENCH_serve.json", ("headline_serve_knee_ratio",),
      "open-loop saturation knee: p4db vs noswitch serving (PR 9)"),
+    ("BENCH_contention.json", ("headline_wasted_work_reduction",),
+     "wasted-work cut by network-assisted early aborts (PR 10)"),
 ]
 
 

@@ -49,13 +49,16 @@ from repro.core.hotset import HotIndex
 from repro.core.packets import (ADD, ADDP, CADD, NOP, READ, WRITE,
                                 SwitchConfig, addp_unsafe_rows,
                                 build_packets, build_read_packets)
-from repro.db.faults import FaultPlan, SimulatedCrash, SwitchUnavailable
+from repro.db.conflict import (GAVE_UP, ConflictDetector, EarlyAbort,
+                               RetryPolicy)
+from repro.db.faults import (Brownout, FaultPlan, SimulatedCrash,
+                             SwitchUnavailable)
 from repro.db.txn import Txn, node_of
 from repro.db.wal import (DEFAULT_SEGMENT_SIZE, CheckpointStore,
                           SegmentedWAL)
 from repro.obs.names import (G_INFLIGHT, G_SHARD_DISPATCHES, G_WAL_RECORDS,
                              H_BATCH_SERVICE, H_DRAIN, H_READ_BATCH,
-                             H_TXN_LATENCY, stat_metric)
+                             H_RETRIES, H_TXN_LATENCY, stat_metric)
 from repro.obs.registry import MetricsRegistry, StatsCounter
 from repro.obs.trace import Tracer
 
@@ -80,7 +83,8 @@ class Abort(Exception):
 
 @dataclass
 class LogEntry:
-    kind: str                 # begin|write|switch_send|switch_result|commit|abort
+    kind: str   # begin|write|switch_send|switch_result|commit|abort|
+                # early_abort|ckpt
     tid: int
     payload: dict = field(default_factory=dict)
 
@@ -151,8 +155,21 @@ class DBNode:
         committed = {e.tid for e in self.wal if e.kind == "commit"}
         # switch sub-txns count as committed once sent (paper §6.1)
         committed |= {e.tid for e in self.wal if e.kind == "switch_send"}
+        surviving = []
         for e in self.wal:
-            if e.kind == "write" and e.tid in committed:
+            if e.kind == "write":
+                surviving.append(e)
+            elif e.kind == "early_abort":
+                # the early-abort multicast cancels every write record
+                # the aborted attempt logged (a wound can land mid-2PC-
+                # prepare, after redo records hit the log): even when a
+                # LATER attempt of the same tid commits, recovery must
+                # never replay the aborted attempt's writes.  With no
+                # early_abort records this walk replays exactly the
+                # original committed-writes-in-log-order sequence.
+                surviving = [w for w in surviving if w.tid != e.tid]
+        for e in surviving:
+            if e.tid in committed:
                 self.store[e.payload["key"]] = e.payload["new"]
 
 
@@ -219,7 +236,9 @@ class Cluster:
                  fault_plan: Optional[FaultPlan] = None,
                  telemetry: bool = True,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 early_abort: bool = False,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.nodes = [DBNode(i, protocol, wal_mode=wal_mode,
                              wal_segment_size=wal_segment_size)
                       for i in range(n_nodes)]
@@ -266,6 +285,23 @@ class Cluster:
         self._switch_down = False
         self._mid_migration_evicted: set = set()
         self._standby = self._fresh_engine() if standby else None
+        # contention-resilience plane (repro.db.conflict): the detector
+        # observes cold/warm intent sets at 2PC begin and early-aborts
+        # losers.  Default-off; on the strictly sequential run/run_batch
+        # paths it is registered but can never see an overlap, so results
+        # stay byte-identical (pinned by the differential tests) — the
+        # interleaved plane (ContentionArena) is where it fires.
+        self.early_abort = bool(early_abort)
+        self.detector = ConflictDetector(protocol) if early_abort else None
+        self.retry_policy = retry_policy
+        # switch brown-out (db.faults.Brownout: slow/lossy, not dead) —
+        # hot admissions demote to the cold path against home-store-
+        # authoritative values, bounded by the demotion budget
+        self._brownout = False
+        self._brownout_cap: Optional[int] = None
+        self._brownout_served = 0
+        self._brownout_evicted: set = set()
+        self._brownout_tid = itertools.count(1 << 42)
 
     # ------------------------------------------------------------ setup --
     def _fresh_engine(self):
@@ -328,6 +364,22 @@ class Cluster:
         # is what makes the migration's per-node swap load-bearing
         hi = self.nodes[txn.home].hot_index
         kind = hi.classify(trace)
+        if kind != "cold" and self._brownout:
+            # brown-out: the switch is degraded, not dead — register
+            # values were evicted to their home stores (authoritative),
+            # so hot admissions DEMOTE to the cold path and keep
+            # committing, bounded by the demotion budget; past it the
+            # cluster sheds load instead of queueing without bound
+            # (mirrors PR 6's partial-availability semantics)
+            if self._brownout_cap is not None \
+                    and self._brownout_served >= self._brownout_cap:
+                raise SwitchUnavailable(
+                    f"brown-out demotion budget "
+                    f"({self._brownout_cap}) exhausted: txn {txn.tid} "
+                    f"shed (exit_brownout() to restore hot service)")
+            self._brownout_served += 1
+            self.stats["demoted_brownout"] += 1
+            return "cold"
         if kind != "cold" and self._switch_down:
             # partial availability: a crash mid-migration leaves evicted
             # keys authoritative in their home-node stores — txns touching
@@ -352,9 +404,10 @@ class Cluster:
         B = len(txns)
         if not self.use_switch:
             return ["cold"] * B
-        if self._switch_down:
+        if self._switch_down or self._brownout:
             # availability-aware slow path (raises SwitchUnavailable for
-            # txns that need live registers, demotes evicted-only txns)
+            # txns that need live registers, demotes evicted-only and
+            # brown-out txns under the budget)
             return [self.classify(t) for t in txns]
         n_ops = np.fromiter((len(t.ops) for t in txns), np.int64, B)
         keys = np.concatenate([t.ops_np for t in txns])[:, 1] if B \
@@ -465,8 +518,10 @@ class Cluster:
         raising on the first incompatible txn.  ``auto`` mode never
         rejects, so the equivalence contract is unconditional there.
 
-        Returns the per-txn result lists in admission order (None where a
-        txn exhausted its retries)."""
+        Returns the per-txn result lists in admission order.  A txn that
+        exhausted its retries holds the falsy ``GAVE_UP`` sentinel —
+        distinct from ``None``, which on the async path marks a hot slot
+        whose group has not yet been drained."""
         t0 = time.perf_counter() if self.metrics is not None else 0.0
         tr = self.tracer.start(f"batch:{len(txns)}") \
             if self.tracer is not None else None
@@ -510,23 +565,80 @@ class Cluster:
         return results
 
     def _run_with_retries(self, txn: Txn, kind: str, max_retries: int):
+        """Cold/warm execution under the retry policy.  Attempts are
+        budgeted by ``self.retry_policy`` — or, when none is set, a
+        default ``RetryPolicy(max_retries=max_retries)`` whose schedule
+        is attempt-for-attempt the legacy bare loop (backoff is virtual;
+        the sequential cluster never sleeps).  Exhaustion returns the
+        falsy ``GAVE_UP`` sentinel (NOT ``None`` — ``None`` is an
+        undrained async slot) after one ``gave_up`` bump.  Per-class
+        attempt counts land in the ``txn_retries`` histogram; ops burnt
+        by eventually-aborted attempts in ``stats["wasted_ops"]``."""
         fn = self._run_cold if kind == "cold" else self._run_warm
-        for _ in range(max_retries):
+        policy = self.retry_policy if self.retry_policy is not None \
+            else RetryPolicy(max_retries=max_retries)
+        det = self.detector
+        attempts = 0
+        for attempt, _wait in policy.schedule(txn.tid):
+            attempts = attempt
             self.stats[kind] += 1
+            if det is not None:
+                # 2PC begin: declare the cold-part intent set to the
+                # "switch".  The sequential paths run one txn at a time,
+                # so no overlap can exist here (results stay pinned
+                # byte-identical with the knob off); overlaps — and
+                # early aborts — happen on the interleaved plane
+                # (repro.db.conflict.ContentionArena).
+                reads, writes = self._intent_sets(txn, kind)
+                admitted, _ = det.admit(txn.tid, txn.tid, reads, writes)
+                if not admitted:
+                    self.stats["early_aborts"] += 1
+                    self.stats["aborts"] += 1
+                    self.nodes[txn.home].log("early_abort", txn.tid,
+                                             attempt=attempt)
+                    continue
             try:
-                return fn(txn)
-            except Abort:
+                out = fn(txn)
+                if det is not None:
+                    det.release(txn.tid)
+                self._observe_retries(kind, attempts)
+                return out
+            except (Abort, EarlyAbort):
                 self.stats["aborts"] += 1
                 for n in self.nodes:
                     n.release_all(txn.tid)
+                if det is not None:
+                    det.release(txn.tid)
             except Exception:
                 # non-Abort failures (e.g. a rejected explicit switch_mode)
                 # must not leak this txn's locks while propagating
                 for n in self.nodes:
                     n.release_all(txn.tid)
+                if det is not None:
+                    det.release(txn.tid)
                 raise
         self.stats["gave_up"] += 1
-        return None
+        self._observe_retries(kind, attempts)
+        return GAVE_UP
+
+    def _intent_sets(self, txn: Txn, kind: str):
+        """Cold-part read/write key sets declared to the conflict
+        detector at 2PC begin.  Warm txns declare only their cold part:
+        the switch sub-txn is abort-free and never takes locks."""
+        reads, writes = set(), set()
+        for o, k, _ in txn.ops:
+            if kind == "warm" and self.hot_index.is_hot(k):
+                continue
+            (reads if o == READ else writes).add(k)
+        return reads, writes
+
+    def _observe_retries(self, kind: str, attempts: int):
+        """Per-class retry-count histogram (obs registry): how many
+        attempts each finished (committed or gave-up) txn used."""
+        if self.metrics is not None and attempts:
+            self.metrics.histogram(
+                H_RETRIES, help="attempts per finished txn", lo=1.0,
+                hi=1024.0, klass=kind).observe(attempts)
 
     def _flush_hot_group(self, pending: List[Tuple[int, Txn]],
                          results: List[Optional[list]], tr=None):
@@ -681,29 +793,40 @@ class Cluster:
         results = [0] * len(txn.ops)
         staged: List[Tuple[int, int, int]] = []        # (node, key, newval)
         values: Dict[int, int] = {}
-        for i, (o, k, v) in enumerate(txn.ops):
-            if keys_subset is not None and k not in keys_subset:
-                continue
-            n = self.nodes[node_of(k)]
-            mode = "S" if o == READ else "X"
-            n.acquire(txn.tid, ts, k, mode)
-            cur = values.get(k, n.store[k])
-            if o == READ:
-                results[i] = cur
-            elif o == WRITE:
-                values[k] = v
-                results[i] = v
-            elif o == ADD:
-                values[k] = cur + v
-                results[i] = values[k]
-            elif o == ADDP:
-                values[k] = cur + results[v]
-                results[i] = values[k]
-            elif o == CADD:
-                if cur + v < 0:
-                    raise Abort(f"constraint on {k}")
-                values[k] = cur + v
-                results[i] = values[k]
+        executed = 0
+        try:
+            for i, (o, k, v) in enumerate(txn.ops):
+                if keys_subset is not None and k not in keys_subset:
+                    continue
+                n = self.nodes[node_of(k)]
+                mode = "S" if o == READ else "X"
+                n.acquire(txn.tid, ts, k, mode)
+                cur = values.get(k, n.store[k])
+                if o == READ:
+                    results[i] = cur
+                elif o == WRITE:
+                    values[k] = v
+                    results[i] = v
+                elif o == ADD:
+                    values[k] = cur + v
+                    results[i] = values[k]
+                elif o == ADDP:
+                    values[k] = cur + results[v]
+                    results[i] = values[k]
+                elif o == CADD:
+                    if cur + v < 0:
+                        raise Abort(f"constraint on {k}")
+                    values[k] = cur + v
+                    results[i] = values[k]
+                executed += 1
+        except Abort:
+            # wasted-work accounting: ops this doomed attempt executed
+            # before discovering the conflict/constraint
+            self.stats["wasted_ops"] += executed
+            raise
+        # crash point between prepare (locks held, redo staged) and the
+        # apply+log step — the lock-leak property test's worst window
+        self._fault("mid_2pc_prepare", tid=txn.tid)
         for k, nv in values.items():
             n = self.nodes[node_of(k)]
             n.log("write", txn.tid, key=k, old=n.store[k], new=nv)
@@ -792,6 +915,71 @@ class Cluster:
         checkpoint in the incremental chain."""
         self.checkpoint(reason="offload")
 
+    # -------------------------------------------------------- brown-out --
+    def enter_brownout(self, plan=None):
+        """Enter the switch *brown-out* fault mode (``db.faults.Brownout``:
+        slow/lossy — degraded, not dead).  The register plane is drained
+        and every switch-resident value is evicted to its home store as a
+        real WAL-logged write (the migration evict step's discipline), so
+        home stores become authoritative: hot/warm admissions DEMOTE to
+        the cold path (``classify``) and reads/scans fall back to the
+        stores — the cluster keeps committing through the brown-out
+        instead of failing.  Demotions are bounded by the plan's
+        ``demote_cap``; past the budget admissions are shed with
+        ``SwitchUnavailable`` (bounded queueing, never unbounded).
+        ``plan`` may be a ``Brownout``, a bare int cap, or None
+        (unbounded demotion)."""
+        if self._brownout:
+            return
+        if plan is None:
+            plan = Brownout()
+        elif isinstance(plan, int):
+            plan = Brownout(demote_cap=plan)
+        self.drain()
+        hot_keys = sorted(self.hot_index.placement.slot) \
+            if self.use_switch else []
+        vals = self.read_batch(hot_keys) if hot_keys else []
+        for k, v in zip(hot_keys, vals):
+            n = self.nodes[node_of(k)]
+            t = next(self._brownout_tid)
+            n.log("write", t, key=k, old=n.store[k], new=v)
+            n.store[k] = v
+            n.log("commit", t)
+        self._brownout = True
+        self._brownout_cap = plan.demote_cap
+        self._brownout_served = 0
+        self._brownout_evicted = set(hot_keys)
+        self.stats["brownouts"] += 1
+
+    def exit_brownout(self):
+        """Leave brown-out: write every evicted key's home-store value
+        (including cold-path updates made during the window) back into
+        its register through real logged switch dispatches — replay, the
+        checkpoint chain and the warm standby all observe the reload —
+        and restore hot service.  Registers come back byte-identical to
+        a cluster that served the same txns without the brown-out."""
+        if not self._brownout:
+            return
+        self._brownout = False              # reads may hit the switch again
+        keys = sorted(self._brownout_evicted)
+        self._brownout_evicted = set()
+        group = [Txn("brownout_reload",
+                     [(WRITE, k, self.nodes[node_of(k)].store[k])],
+                     node_of(k), tid=next(self._brownout_tid))
+                 for k in keys]
+        if not group:
+            return
+        pkts, meta = build_packets(group, self.hot_index, self.switch_cfg)
+        for t in group:
+            self.nodes[t.home].log("switch_send", t.tid, ops=list(t.ops))
+        pb = self.switch.execute_batch(pkts, meta, mode=self.switch_mode)
+        res = pb.results_np()
+        for b, t in enumerate(group):
+            self.nodes[t.home].log("switch_result", t.tid,
+                                   gid=int(pb.gids[b]),
+                                   results=res[b, :1].tolist())
+        self._note_sends(len(group))
+
     def verify_wals(self) -> list:
         """Run the hash-chain integrity walk over every node's WAL
         (no-op entries for nodes in legacy list mode)."""
@@ -840,6 +1028,9 @@ class Cluster:
         (partial availability), every other hot key raises
         ``SwitchUnavailable``.  Cold keys always read the home store."""
         if self.use_switch and self.hot_index.is_hot(key):
+            if self._brownout:
+                # brown-out: home stores are authoritative (evicted)
+                return self.nodes[node_of(key)].store[key]
             if self._switch_down:
                 if key in self._mid_migration_evicted:
                     return self.nodes[node_of(key)].store[key]
@@ -874,6 +1065,8 @@ class Cluster:
         out = np.zeros(len(keys), np.int64)
         hot = self.hot_index.hot_mask_np(keys) if self.use_switch \
             else np.zeros(len(keys), bool)
+        if self._brownout:
+            hot[:] = False              # brown-out: stores authoritative
         if self._switch_down and hot.any():
             bad = [int(k) for k in keys[hot]
                    if k not in self._mid_migration_evicted]
@@ -920,6 +1113,8 @@ class Cluster:
         keys = np.asarray(list(keys), np.int64)
         hot = self.hot_index.hot_mask_np(keys) if self.use_switch \
             else np.zeros(len(keys), bool)
+        if self._brownout:
+            hot[:] = False              # brown-out: stores authoritative
         if self._switch_down and hot.any():
             bad = [int(k) for k in keys[hot]
                    if k not in self._mid_migration_evicted]
@@ -1063,6 +1258,10 @@ class Cluster:
                                "(Cluster(standby=True))")
         if not self._switch_down:
             self.crash_switch()
+        # double-fault window: the standby itself can die during takeover
+        # (armed "mid_failover" plan loses it) — the switch stays down and
+        # recover_switch() is the cold WAL+checkpoint fallback
+        self._fault("mid_failover")
         engine = self._standby
         # host-known GID high-water mark: new txns after takeover must get
         # fresh GIDs above everything already logged

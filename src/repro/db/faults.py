@@ -33,6 +33,23 @@ Crash points (the matrix in ``tests/test_durability.py``):
     logging node's open WAL segment are torn off (simulating an unsynced
     tail lost in the crash); the surviving log is a clean verifiable
     prefix and recovery rebuilds exactly the surviving transactions.
+
+``mid_2pc_prepare``
+    Inside a cold/warm 2PC prepare, after locks are acquired and staged
+    but before the write records land — the window where an in-flight
+    early abort (PR 10) may arrive; the lock-leak property test asserts
+    no lock survives for the aborted tid.
+
+``mid_failover``
+    During ``Cluster.fail_over()``, after the primary switch is marked
+    down but before the standby takes over — the double-fault window:
+    the standby itself dies (``cluster._standby`` is lost) and recovery
+    must fall back to cold WAL+checkpoint rebuild.
+
+This module also defines ``Brownout`` — not a crash point but a *degraded*
+switch mode (slow/lossy, still alive): ``Cluster.enter_brownout(plan)``
+evicts the register plane to home stores and demotes hot admissions to the
+cold path, bounded by ``demote_cap``; see ``Cluster.enter_brownout``.
 """
 from __future__ import annotations
 
@@ -42,7 +59,26 @@ from typing import Optional
 from .wal import SegmentedWAL
 
 CRASH_POINTS = ("mid_group_dispatch", "undrained_async", "mid_migration",
-                "torn_tail")
+                "torn_tail", "mid_2pc_prepare", "mid_failover")
+
+
+@dataclass(frozen=True)
+class Brownout:
+    """A switch *brown-out*: degraded (slow/lossy), not dead.  Under a
+    brown-out the cluster demotes hot admissions to the cold path instead
+    of failing them; ``demote_cap`` bounds how many demotions are queued
+    through the cold path before further hot admissions are shed with
+    ``SwitchUnavailable`` (None = unbounded).  ``slow_factor`` is the
+    modeled service-time inflation of the degraded switch — carried for
+    the sim mirror and for operators reading the plan."""
+    demote_cap: Optional[int] = None
+    slow_factor: float = 4.0
+
+    def __post_init__(self):
+        if self.demote_cap is not None and self.demote_cap < 0:
+            raise ValueError("demote_cap must be >= 0 or None")
+        if self.slow_factor < 1.0:
+            raise ValueError("slow_factor must be >= 1.0")
 
 
 class SwitchUnavailable(Exception):
@@ -88,6 +124,8 @@ class FaultPlan:
         self.fired = True
         if point == "mid_migration":
             cluster._mid_migration_evicted = set(ctx.get("evicted", ()))
+        if point == "mid_failover":
+            cluster._standby = None     # the standby died mid-takeover
         if self.tear_records > 0:
             wal = cluster.nodes[self.tear_node].wal
             if isinstance(wal, SegmentedWAL):

@@ -29,6 +29,10 @@ STAT_NAMES = {
     "commits":        ("txns_committed_total", "committed transactions"),
     "aborts":         ("txn_aborts_total", "2PL aborts (before any retry)"),
     "gave_up":        ("txns_gave_up_total", "txns dropped after exhausting retries"),
+    "early_aborts":   ("txn_early_aborts_total", "in-flight conflicts aborted before completing doomed round-trips"),
+    "wasted_ops":     ("txn_wasted_ops_total", "ops executed by eventually-aborted attempts"),
+    "demoted_brownout": ("txns_demoted_brownout_total", "hot admissions demoted to cold during switch brown-out"),
+    "brownouts":      ("switch_brownouts_total", "switch brown-out windows entered"),
     "multipass":      ("switch_multipass_total", "hot txns needing >1 switch pass"),
     "distributed":    ("txns_distributed_total", "cold/warm txns spanning >1 node (2PC)"),
     "checkpoints":    ("checkpoints_total", "checkpoints taken"),
@@ -62,6 +66,7 @@ H_DRAIN = "drain_seconds"
 H_READ_BATCH = "read_batch_seconds"
 H_PHASE = "phase_seconds"
 H_ADMISSION_WAIT = "admission_wait_seconds"
+H_RETRIES = "txn_retries"
 G_INFLIGHT = "inflight_batches"
 G_SHARD_DISPATCHES = "shard_dispatches"
 G_WAL_RECORDS = "wal_records"

@@ -112,6 +112,17 @@ functional EpochController's cost-benefit migration gate; and
 a pending re-placement demote to the cold path (home-store reads)
 instead of waiting out the migration pause — the DES answer to "what
 does a switch crash cost at load X".
+
+Contention mirror (default-off, zero events when off): ``early_abort``
+registers every cold/warm txn's lock-intent set with the switch at 2PC
+begin; on overlap the loser is aborted mid-flight behind one
+``Timing.t_abort_notify`` multicast instead of burning its remaining
+round-trips (NO_WAIT: the new registrant dies; WAIT_DIE: the younger
+dies, an older registrant *wounds* the younger in-flight txn, which
+aborts at its next op tick and frees its locks early).  The result dict
+gains an ``early_abort`` key only when the knob is on; wasted-op
+accounting (ops executed by eventually-aborted attempts) fills the
+registry on every run.
 """
 from __future__ import annotations
 
@@ -166,6 +177,13 @@ class Timing:
     t_interswitch: float = 1e-6       # per extra switch hop a cross-shard
                                       # hot txn pays (multi-switch topology;
                                       # only charged when n_switches > 1)
+    t_abort_notify: float = 2e-6      # mid-flight early-abort multicast:
+                                      # the switch spots overlapping in-
+                                      # flight intent sets and notifies the
+                                      # loser (Jepsen et al. optimistic
+                                      # aborts); only charged when
+                                      # early_abort=True and a conflict
+                                      # actually fires
 
 
 @dataclass
@@ -239,6 +257,17 @@ class SystemConfig:
                                       # cross-shard txns pay t_interswitch
                                       # per extra hop.  1 = the single-
                                       # switch model, event for event
+    early_abort: bool = False         # network-assisted early aborts: the
+                                      # switch observes cold/warm lock-
+                                      # intent sets registered at 2PC
+                                      # begin, detects overlaps, and
+                                      # multicasts an abort to the loser
+                                      # (t_abort_notify) before it burns
+                                      # its doomed round-trips; WAIT_DIE
+                                      # wounds the younger in-flight txn
+                                      # mid-op-loop, freeing its locks
+                                      # earlier.  False = zero events, the
+                                      # PR 9 result dict key-for-key
 
 
 @dataclass
@@ -396,6 +425,17 @@ class ClusterSim:
         self.admit_queue_cap = int(admit_queue_cap)
         self.arrivals = 0
         self.dropped = 0
+        # in-flight conflict detector mirror (early_abort=True, p4db only):
+        # intent sets keyed by txn ts; wounded victims abort at their next
+        # op tick.  Default-off adds ZERO events; the wasted-op attribute
+        # fills on every run (registry-only, never a default result key).
+        self._ea_on = system.early_abort and system.kind == "p4db"
+        self._ea_inflight: Dict[int, tuple] = {}   # ts -> (wset, rset)
+        self._ea_wounded: set = set()
+        self.early_aborts = 0
+        self.ea_wounds = 0
+        self.conflicts_detected = 0
+        self.wasted_ops = 0
 
     def _charge(self, phase, dt):
         if getattr(self, "sim", None) is not None and \
@@ -511,8 +551,8 @@ class ClusterSim:
                 if self.sys.drop_on_abort:
                     break
                 attempt += 1
-                self._ts += 1
-                committed = yield from self.run_txn(prof, self._ts, node)
+                ts = self._retry_ts(ts)
+                committed = yield from self.run_txn(prof, ts, node)
             if not committed:
                 continue
             if sim.now >= self.warmup:
@@ -638,7 +678,8 @@ class ClusterSim:
             yield ("release", self.admits[node])
             return
         self._ts += 1
-        committed = yield from self.run_txn(prof, self._ts, node)
+        ts = self._ts
+        committed = yield from self.run_txn(prof, ts, node)
         attempt = 1
         while not committed:
             self.aborts[prof.klass] += 1
@@ -647,8 +688,8 @@ class ClusterSim:
             if self.sys.drop_on_abort:
                 break
             attempt += 1
-            self._ts += 1
-            committed = yield from self.run_txn(prof, self._ts, node)
+            ts = self._retry_ts(ts)
+            committed = yield from self.run_txn(prof, ts, node)
         if committed and sim.now >= self.warmup:
             self._account(prof, t_arr)
         self._occ_admit.adjust(-1, sim.now)
@@ -845,12 +886,97 @@ class ClusterSim:
             yield from self._nic_xfer(node, 1)                # RX
         self._sends_since_ckpt += 1
 
+    # ------------------------------------- in-flight conflict detector --
+    def _ea_admit(self, ts: int, intent) -> bool:
+        """Register this txn's lock-intent set with the 'switch' at 2PC
+        begin.  The registrant aborts early ONLY when it is already
+        *doomed*: some intended key is currently locked incompatibly by
+        another txn, so under NO_WAIT it would die at that lock anyway —
+        after burning its round-trips.  (A mere intent overlap is NOT a
+        conflict: the intent window is much wider than the lock-hold
+        window, and killing on it serializes txns that would have
+        interleaved fine.)  WAIT_DIE: the younger dies — an older
+        registrant WOUNDS the younger lock holder instead (it aborts at
+        its next op tick, freeing the lock early; Wound-Wait-style aging
+        grafted onto the retry discipline).  Returns False when the
+        registrant itself must abort."""
+        wd = self.sys.protocol == "WAIT_DIE"
+        for k, _, m in intent:
+            lk = self.locks.get(k)
+            if lk is None or not lk.owners:
+                continue
+            for ots, om in list(lk.owners.items()):
+                if ots == ts or (m == "S" and om == "S"):
+                    continue
+                self.conflicts_detected += 1
+                if wd and ts < ots:
+                    self._ea_wound(ots)
+                    continue
+                return False                   # registrant is doomed
+        self._ea_inflight[ts] = (
+            frozenset(k for k, _, m in intent if m == "X"),
+            frozenset(k for k, _, m in intent if m == "S"))
+        return True
+
+    def _ea_on_grant(self, ts: int, key, mode: str):
+        """The switch observes a contended lock grant and multicasts
+        early aborts to every in-flight txn whose registered intent is
+        now doomed to die at this lock (NO_WAIT), or that this holder
+        out-ages (WAIT_DIE) — they abort at their next op tick instead
+        of completing their remaining round-trips first."""
+        wd = self.sys.protocol == "WAIT_DIE"
+        for ots, (ow, orr) in list(self._ea_inflight.items()):
+            if ots == ts:
+                continue
+            if not (key in ow or (mode == "X" and key in orr)):
+                continue
+            if wd and ots < ts:
+                continue          # older peer ages into priority; spare it
+            self.conflicts_detected += 1
+            self._ea_wound(ots)
+
+    def _ea_wound(self, ts: int):
+        self._ea_inflight.pop(ts, None)
+        self._ea_wounded.add(ts)
+        self.ea_wounds += 1
+
+    def _ea_release(self, ts: int):
+        self._ea_inflight.pop(ts, None)
+        self._ea_wounded.discard(ts)
+
+    def _retry_ts(self, ts: int) -> int:
+        """Timestamp for a retry attempt.  Default: a fresh ts (the
+        pre-contention model, event for event).  With the early-abort
+        mirror on under WAIT_DIE, retries KEEP the first attempt's ts —
+        the txn ages into priority (the functional RetryPolicy's
+        discipline), which is what makes the wound path reachable and
+        rules out livelock between peers."""
+        if self._ea_on and self.sys.protocol == "WAIT_DIE":
+            return ts
+        self._ts += 1
+        return self._ts
+
     def cold_part(self, prof: TxnProfile, ts: int, include_hot=False):
         T = self.T
         ops = list(prof.cold_ops)
         hot_keys = {k for k, _, _ in prof.hot_ops}
         if include_hot:
             ops = ops + list(prof.hot_ops)
+        if self._ea_on and ops:
+            # the switch only sees LOCK-intent: keys that would actually
+            # take a lock (hot under include_hot, or pre-contended) — the
+            # same contention model the lock layer itself applies, so
+            # uniform cold keys can never false-positive an abort
+            intent = [(k, n, m) for k, n, m in ops
+                      if (include_hot and k in hot_keys)
+                      or self._contended(k)]
+            if intent and not self._ea_admit(ts, intent):
+                # early abort at begin: pay only the notify multicast, no
+                # round-trips, no locks taken, nothing wasted
+                self.early_aborts += 1
+                self._charge("early_abort_notify", T.t_abort_notify)
+                yield ("delay", T.t_abort_notify)
+                return False
         if include_hot and hot_keys and self.sys.kind == "lmswitch":
             # NetLock: ONE batched lock request for all hot keys handled in
             # the switch data plane (half node RTT); deny -> abort
@@ -864,7 +990,17 @@ class ClusterSim:
                 yield ("delay", T.t_local_op if node == prof.home
                        else T.rtt_node)
             ops = list(prof.cold_ops)
+        done = 0
         for key, node, mode in ops:
+            if self._ea_on and ts in self._ea_wounded:
+                # a mid-flight wound landed: abort now, before the next
+                # round-trip — work already done is wasted, locks free early
+                self.early_aborts += 1
+                self.wasted_ops += done
+                self._charge("early_abort_notify", T.t_abort_notify)
+                yield ("delay", T.t_abort_notify)
+                self.release_all(prof, ts, include_hot=include_hot)
+                return False
             hot = include_hot and key in hot_keys
             if node == prof.home:
                 self._charge("local_work", T.t_local_op)
@@ -879,8 +1015,12 @@ class ClusterSim:
                 granted = yield ("lock", self.lock_of(key), mode, ts)
                 self._charge("lock_acquisition", self.sim.now - t0)
                 if not granted:
+                    self.wasted_ops += done
                     self.release_all(prof, ts, include_hot=include_hot)
                     return False
+                if self._ea_on:
+                    self._ea_on_grant(ts, key, mode)
+            done += 1
         return True
 
     def _contended(self, key) -> bool:
@@ -896,6 +1036,8 @@ class ClusterSim:
             lk = self.locks.get(k)
             if lk is not None:
                 lk.release(ts, self.sim)
+        if self._ea_on:
+            self._ea_release(ts)
 
     # -------------------------------------------- adaptive re-placement --
     def _controller(self):
@@ -1079,6 +1221,13 @@ class ClusterSim:
         if self.sys.crash_at > 0:
             out["failover"] = self.failover
             out["ckpts_taken"] = self.ckpts_taken
+        if self.sys.early_abort:
+            # contention keys appear only when the knob is on (same golden-
+            # pin discipline as the durability keys above)
+            out["early_abort"] = dict(
+                early_aborts=self.early_aborts, wounds=self.ea_wounds,
+                conflicts_detected=self.conflicts_detected,
+                wasted_ops=self.wasted_ops)
         if self.sys.gate_t_reconfig > 0:
             out["reconfigs_gated"] = self.reconfigs_gated
         if self.sys.partial_availability:
@@ -1141,4 +1290,12 @@ class ClusterSim:
                                  self.commits["total"])
         self.metrics.counter("txn_aborts_total", help="aborts")._set(
             sum(self.aborts.values()))
+        self.metrics.counter(
+            "txn_wasted_ops_total",
+            help="ops executed by eventually-aborted attempts")._set(
+                self.wasted_ops)
+        self.metrics.counter(
+            "txn_early_aborts_total",
+            help="in-flight conflicts aborted before completion")._set(
+                self.early_aborts)
         g("switch_rounds", help="batched switch rounds").set(self.rounds)

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.hotset import build_hot_index
 from repro.core.packets import ADD, CADD, READ, WRITE, SwitchConfig
-from repro.db.dbms import Cluster
+from repro.db.dbms import GAVE_UP, Cluster
 from repro.db.txn import Txn, key_of
 from repro.workloads import smallbank, tpcc, ycsb
 
@@ -173,7 +173,7 @@ def test_hot_counter_semantics():
     c_cold = Cluster(4, SW, hot_index=None, use_switch=False)
     out = c_cold.run(Txn("doomed", [(CADD, cold_key, -5)], home=0),
                      max_retries=4)
-    assert out is None
+    assert out is GAVE_UP and not out
     assert c_cold.stats["cold"] == 4
     assert c_cold.stats["aborts"] == 4
     assert c_cold.stats["gave_up"] == 1
@@ -186,6 +186,6 @@ def test_hot_counter_semantics():
     out = c_wd.run(Txn("doomed-warm", [(ADD, hot_key, 1),
                                        (CADD, cold_key, -5)], home=0),
                    max_retries=3)
-    assert out is None
+    assert out is GAVE_UP and not out
     assert c_wd.stats["warm"] == 3 and c_wd.stats["gave_up"] == 1
     assert c_wd.stats["hot"] == 0

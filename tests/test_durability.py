@@ -364,6 +364,29 @@ def test_failover_without_standby_raises():
         c.fail_over()
 
 
+def test_double_fault_failover_falls_back_to_cold_recovery():
+    """Double fault: the warm standby itself dies DURING takeover
+    (``mid_failover`` crash point).  The switch stays down, the standby
+    is gone, and cold WAL+checkpoint recovery must still rebuild the
+    registers byte-identical to the pre-crash drained state."""
+    c = _cluster(checkpoint_interval=16, standby=True,
+                 fault_plan=FaultPlan("mid_failover"))
+    for lo in range(0, 48, 24):
+        c.run_batch([copy.deepcopy(t) for t in _txns(11 + lo, 24)])
+    c.drain()
+    before = _regs(c)
+    with pytest.raises(SimulatedCrash):
+        c.fail_over()
+    assert c._standby is None                # the standby died too
+    assert c._switch_down                    # nothing took over
+    c.recover_switch()                       # cold fallback
+    np.testing.assert_array_equal(before, _regs(c))
+    # the recovered cluster keeps committing
+    c.run_batch([copy.deepcopy(t) for t in _txns(99, 8)])
+    c.drain()
+    assert c.stats["recoveries"] == 1
+
+
 def test_load_then_failover_recovers_new_value():
     """Standby blind-spot regression: a post-checkpoint ``load()`` must be
     a logged write (WAL write + switch_send/switch_result), so failover
